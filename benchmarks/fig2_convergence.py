@@ -1,0 +1,77 @@
+"""Paper Figure 2 reproduction: training loss / test accuracy for MIFA vs
+{biased FedAvg, FedAvg device-sampling S=50/100, FedAvg-IS} on non-iid data
+with label-correlated Bernoulli availability, p_min in {0.1, 0.2}.
+
+Strongly convex run = logistic model (paper: MNIST/logistic);
+non-convex run = 2-layer MLP (paper: CIFAR-10/LeNet-5). Synthetic stand-ins —
+see DESIGN.md §6 for why and what transfers.
+"""
+from __future__ import annotations
+
+import time
+
+from common import emit, paper_problem, save_artifact
+
+from repro.core import MIFA, BiasedFedAvg, FedAvgIS, FedAvgSampling, run_fl
+from repro.optim import inv_t
+
+
+def run(model_name: str, p_min: float, *, n_rounds: int, n_clients: int,
+        seeds=(0, 1, 2)) -> dict:
+    out: dict = {"model": model_name, "p_min": p_min, "rounds": n_rounds,
+                 "algorithms": {}}
+    model, batcher, probs, make_part, eval_fn = paper_problem(
+        model_name, n_clients=n_clients, p_min=p_min)
+    algos = {
+        "mifa": MIFA(memory="array"),
+        "biased_fedavg": BiasedFedAvg(),
+        "fedavg_s50": FedAvgSampling(s=n_clients // 2),
+        "fedavg_s100": FedAvgSampling(s=n_clients),
+        "fedavg_is": FedAvgIS(tuple(probs.tolist())),
+    }
+    for name, algo in algos.items():
+        losses, accs, curves = [], [], []
+        t0 = time.time()
+        for seed in seeds:
+            _, hist = run_fl(
+                model=model, algo=algo, participation=make_part(seed + 100),
+                batcher=batcher, schedule=inv_t(1.0), n_rounds=n_rounds,
+                weight_decay=1e-3, seed=seed, eval_fn=eval_fn,
+                eval_every=max(n_rounds // 10, 1),
+                uses_update_clock=name.startswith("fedavg_s"))
+            losses.append(hist.eval_loss[-1][1])
+            accs.append(hist.eval_acc[-1][1])
+            curves.append(hist.train_loss)
+        wall = time.time() - t0
+        out["algorithms"][name] = {
+            "final_eval_loss_mean": sum(losses) / len(losses),
+            "final_eval_acc_mean": sum(accs) / len(accs),
+            "final_eval_loss_all": losses,
+            "train_curve_seed0": curves[0][:: max(n_rounds // 100, 1)],
+            "wall_s": wall,
+        }
+        emit(f"fig2/{model_name}/pmin{p_min}/{name}",
+             wall / len(seeds) / n_rounds * 1e6,
+             f"loss={out['algorithms'][name]['final_eval_loss_mean']:.4f};"
+             f"acc={out['algorithms'][name]['final_eval_acc_mean']:.4f}")
+    return out
+
+
+def main(fast: bool = False) -> None:
+    # default sized to finish on a CPU container; the paper-scale run
+    # (clients=100, rounds=200, seeds=3) is fig2_full below
+    rounds = 120 if fast else 160
+    clients = 30 if fast else 60
+    seeds = (0,) if fast else (0, 1)
+    results = []
+    for p_min in (0.1, 0.2):
+        results.append(run("paper_logistic", p_min, n_rounds=rounds,
+                           n_clients=clients, seeds=seeds))
+    # non-convex run (smaller round budget — MLP is slower)
+    results.append(run("paper_mlp", 0.1, n_rounds=rounds // 2,
+                       n_clients=clients, seeds=seeds[:1]))
+    save_artifact("fig2_convergence", {"results": results})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Emit the §Dry-run and §Roofline markdown tables from dryrun artifacts.
+
+    PYTHONPATH=src python benchmarks/make_experiments_tables.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_gb(x):
+    return f"{x / 1e9:.1f}"
+
+
+def dryrun_table():
+    pod = load("pod")
+    mp = load("multipod")
+    print("| arch | shape | pod: mem/chip (GB) | pod compile (s) | "
+          "multipod: mem/chip (GB) | multipod compile (s) | status |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(pod):
+        r, r2 = pod[key], mp.get(key)
+        if r["status"] == "skip":
+            print(f"| {key[0]} | {key[1]} | — | — | — | — | "
+                  f"skip: {r['reason'][:58]} |")
+            continue
+        m = r["analysis"]["memory"]["peak_estimate_bytes"]
+        m2 = r2["analysis"]["memory"]["peak_estimate_bytes"] if r2 else 0
+        print(f"| {key[0]} | {key[1]} | {fmt_gb(m)} | {r['compile_s']} | "
+              f"{fmt_gb(m2)} | {r2 and r2['compile_s']} | ok |")
+
+
+def roofline_table():
+    pod = load("pod")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "bottleneck | 6ND/2ND model TF | useful ratio | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(pod):
+        r = pod[key]
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        note = ""
+        meta = r.get("meta", {})
+        if meta.get("sequential"):
+            note = "seq-clients"
+        print(f"| {key[0]} | {key[1]} | {t['compute_s'] * 1e3:.1f} | "
+              f"{t['memory_s'] * 1e3:.1f} | {t['collective_s'] * 1e3:.1f} | "
+              f"**{t['bottleneck']}** | {r['model_flops'] / 1e12:.1f} | "
+              f"{r['useful_flops_ratio']:.3f} | {note} |")
+
+
+def collective_mix():
+    pod = load("pod")
+    print("| arch | shape | all-reduce GB | all-gather GB | "
+          "reduce-scatter GB | all-to-all GB | permute GB |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(pod):
+        r = pod[key]
+        if r["status"] != "ok":
+            continue
+        c = r["analysis"]["collective_bytes"]
+        print(f"| {key[0]} | {key[1]} | "
+              f"{c.get('all-reduce', 0) / 1e9:.2f} | "
+              f"{c.get('all-gather', 0) / 1e9:.2f} | "
+              f"{c.get('reduce-scatter', 0) / 1e9:.2f} | "
+              f"{c.get('all-to-all', 0) / 1e9:.2f} | "
+              f"{c.get('collective-permute', 0) / 1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single pod)\n")
+        roofline_table()
+    if which in ("all", "collectives"):
+        print("\n### Collective mix (single pod)\n")
+        collective_mix()

@@ -1,0 +1,53 @@
+"""§Roofline table: read the dry-run artifacts and print/emit the three-term
+roofline per (arch x shape) on the single-pod mesh."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from common import ARTIFACTS, emit, save_artifact
+
+DRYRUN_DIR = os.path.join(ARTIFACTS, "dryrun")
+
+
+def load_records(mesh: str = "pod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(fast: bool = False) -> None:
+    recs = load_records("pod")
+    rows = []
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skip":
+            emit(tag, 0.0, f"skip:{r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"ERROR:{r.get('error', '?')[:80]}")
+            continue
+        t = r["roofline"]
+        mem = r["analysis"]["memory"]
+        row = {
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": t["bottleneck"],
+            "mem_gb_per_chip": mem["peak_estimate_bytes"] / 1e9,
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "model_flops": r["model_flops"],
+        }
+        rows.append(row)
+        emit(tag, t["step_time_lower_bound_s"] * 1e6,
+             f"bottleneck={t['bottleneck']};"
+             f"mem={row['mem_gb_per_chip']:.1f}GB;"
+             f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)}")
+    save_artifact("roofline_table", {"rows": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout). Artifacts land in
+benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
+
+  adversarial      : non-stationary/adversarial availability (paper §1/§5)
+  fig2_convergence : paper Fig. 2 (4 algorithms x p_min, convex + non-convex)
+  case_study       : §5.1 rounds-to-ε vs p_min (Eq. 2 vs Eq. 3)
+  tau_stats        : Thm 5.2/5.3 τ statistics validation
+  agg_throughput   : MIFA fused-aggregation traffic + kernel check
+  roofline_bench   : §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sweep for CI")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import adversarial
+    import agg_throughput
+    import case_study
+    import fig2_convergence
+    import roofline_bench
+    import tau_stats
+
+    modules = {
+        "tau_stats": tau_stats,
+        "agg_throughput": agg_throughput,
+        "adversarial": adversarial,
+        "case_study": case_study,
+        "fig2_convergence": fig2_convergence,
+        "roofline_bench": roofline_bench,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.main(fast=args.fast)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: federated training under device unavailability, in ~40 lines.
+
+Trains a logistic model over 20 simulated devices with label-skewed data and
+Bernoulli availability, comparing MIFA against biased FedAvg and the original
+sampling-based FedAvg — the paper's headline comparison.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import (MIFA, BiasedFedAvg, FedAvgSampling,  # noqa: E402
+                        BernoulliParticipation, label_correlated_probs,
+                        run_fl)
+from repro.data import (ClientBatcher, label_skew_partition,  # noqa: E402
+                        make_classification)
+from repro.models import build_model  # noqa: E402
+from repro.optim import inv_t  # noqa: E402
+
+
+def main() -> None:
+    n_clients, rounds = 20, 120
+    cfg = get_config("paper_logistic").replace(fl_clients=n_clients)
+    model = build_model(cfg)
+
+    # non-iid data: each device holds only two classes
+    X, y = make_classification(10, cfg.d_model, 200, seed=0)
+    Xte, yte = make_classification(10, cfg.d_model, 50, seed=99)
+    idx, labels = label_skew_partition(y, n_clients, seed=0)
+    probs = label_correlated_probs(labels, p_min=0.1)  # stragglers exist
+    batcher = ClientBatcher(X, y, idx, batch_size=32, k_steps=5, seed=0)
+
+    def eval_fn(params):
+        batch = {"x": jnp.asarray(Xte), "y": jnp.asarray(yte)}
+        loss, _ = model.loss_fn(params, batch)
+        return float(loss), float(model.accuracy(params, batch))
+
+    print(f"{'algorithm':<22}{'eval loss':>10}{'accuracy':>10}{'tau_bar':>9}")
+    for name, algo, clock in [
+        ("MIFA (paper)", MIFA(memory="array"), False),
+        ("MIFA (delta memory)", MIFA(memory="delta"), False),
+        ("biased FedAvg", BiasedFedAvg(), False),
+        ("FedAvg sampling S=10", FedAvgSampling(s=10), True),
+    ]:
+        part = BernoulliParticipation(probs, seed=42)
+        _, hist = run_fl(model=model, algo=algo, participation=part,
+                         batcher=batcher, schedule=inv_t(1.0),
+                         n_rounds=rounds, weight_decay=1e-3, seed=0,
+                         eval_fn=eval_fn, eval_every=rounds,
+                         uses_update_clock=clock)
+        print(f"{name:<22}{hist.eval_loss[-1][1]:>10.4f}"
+              f"{hist.eval_acc[-1][1]:>10.3f}{hist.tau_bar:>9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched-serving example: prefill + greedy decode across architectures,
+including the SSM (O(1)-state) and MLA (compressed-cache) decode paths.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(HERE, "..", "src")
+
+
+def main() -> None:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    for arch in ["granite-3-8b", "mamba2-1.3b", "deepseek-v2-lite-16b",
+                 "gemma3-4b"]:
+        print(f"\n=== serving {arch} (smoke config) ===")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--smoke", "--batch", "2", "--prompt-len", "16",
+             "--new-tokens", "8"],
+            check=True, env=env, cwd=os.path.join(HERE, ".."))
+
+
+if __name__ == "__main__":
+    main()

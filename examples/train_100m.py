@@ -1,0 +1,87 @@
+"""End-to-end driver: federated training of a ~100M-param transformer.
+
+A granite-family decoder (12L, d=768, vocab 32k ≈ 110M params) trained with
+MIFA across 8 silo clients on synthetic non-iid token streams, with Bernoulli
+availability. A few hundred rounds on CPU takes a while — use --rounds to
+trim; the default prints progress every round.
+
+    PYTHONPATH=src python examples/train_100m.py --rounds 200
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import MIFA, BernoulliParticipation, TauStats  # noqa: E402
+from repro.core.local_update import client_updates  # noqa: E402
+from repro.data import TokenBatcher  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import cosine  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mb", type=int, default=1)
+    ap.add_argument("--eta0", type=float, default=0.02)
+    args = ap.parse_args()
+
+    cfg = get_config("granite-3-8b").replace(
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+        vocab_size=32_768, fl_clients=args.clients, fl_local_steps=1,
+        param_dtype="float32", remat=False)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    n_params = model.param_count(params)
+    print(f"~100M driver: {n_params / 1e6:.1f}M params, "
+          f"{args.clients} clients, seq {args.seq}")
+
+    batcher = TokenBatcher(n_clients=args.clients, vocab=cfg.vocab_size,
+                           seq_len=args.seq, batch_size=args.mb, k_steps=1,
+                           stream_len=1 << 18, seed=0)
+    probs = np.linspace(0.3, 1.0, args.clients)
+    part = BernoulliParticipation(probs, seed=1)
+    algo = MIFA(memory="array")
+    state = algo.init_state(params, args.clients)
+    sched = cosine(args.eta0, total=args.rounds, warmup=args.rounds // 20)
+    stats = TauStats(args.clients)
+
+    @jax.jit
+    def round_fn(state, params, batch, active, eta):
+        updates, losses = client_updates(model.loss_fn, params, batch, eta,
+                                         K=1)
+        return algo.round_step(state, params, updates, losses, active, eta)
+
+    t0 = time.time()
+    first_loss = None
+    for t in range(args.rounds):
+        active = part.sample(t)
+        stats.update(active)
+        batch = {"tokens": jnp.asarray(batcher.sample_round(t)["tokens"])}
+        eta = jnp.float32(sched(t))
+        state, params, m = round_fn(state, params, batch,
+                                    jnp.asarray(active), eta)
+        loss = float(m["loss"])
+        if first_loss is None:
+            first_loss = loss
+        if t % 10 == 0 or t == args.rounds - 1:
+            print(f"round {t:4d} loss={loss:.4f} "
+                  f"active={int(active.sum())}/{args.clients} "
+                  f"({(time.time() - t0) / (t + 1):.2f}s/round)")
+    print(f"loss {first_loss:.3f} -> {loss:.3f} over {args.rounds} rounds, "
+          f"tau_bar={stats.tau_bar:.2f}, wall={time.time() - t0:.0f}s")
+    assert loss < first_loss, "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Pytree checkpointing on npz (no orbax in the container).
+
+Nested dicts/lists of arrays <-> flat npz keys joined with '/'. List indices
+are stored as '#i' components (so dict keys that *look* numeric — e.g. the
+transformer's segment indices — round-trip as dicts, not lists).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_BF16_KEY = "__bf16_keys__"
+
+
+def _flatten(tree, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten(jax.device_get(tree))
+    # npz cannot store bfloat16: persist as uint16 views + a key manifest
+    bf16_keys = [k for k, v in flat.items() if v.dtype == ml_dtypes.bfloat16]
+    for k in bf16_keys:
+        flat[k] = flat[k].view(np.uint16)
+    flat[_BF16_KEY] = np.asarray(bf16_keys)
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _insert(root: dict, parts: list[str], value):
+    head = parts[0]
+    if len(parts) == 1:
+        root[head] = value
+        return
+    root.setdefault(head, {})
+    _insert(root[head], parts[1:], value)
+
+
+def _listify(node):
+    """Convert dicts whose keys are exactly '#0'..'#n-1' into lists."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _listify(v) for k, v in node.items()}
+    keys = list(node.keys())
+    if keys and all(k.startswith("#") and k[1:].isdigit() for k in keys):
+        idx = sorted(int(k[1:]) for k in keys)
+        if idx == list(range(len(idx))):
+            return [node[f"#{i}"] for i in idx]
+    return node
+
+
+def load_pytree(path: str, as_jax: bool = True):
+    with np.load(path) as z:
+        bf16 = set(z[_BF16_KEY].tolist()) if _BF16_KEY in z.files else set()
+        root: dict = {}
+        for key in z.files:
+            if key == _BF16_KEY:
+                continue
+            val = z[key]
+            if key in bf16:
+                val = val.view(ml_dtypes.bfloat16)
+            if as_jax:
+                val = jnp.asarray(val)
+            _insert(root, key.split("/"), val)
+    return _listify(root)

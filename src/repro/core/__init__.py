@@ -1,0 +1,9 @@
+"""MIFA core: the paper's contribution (Algorithm 1 + baselines + availability)."""
+from repro.core.mifa import MIFA  # noqa: F401
+from repro.core.baselines import (BiasedFedAvg, FedAvgIS,  # noqa: F401
+                                  FedAvgSampling, SCAFFOLDSampling)
+from repro.core.participation import (AdversarialParticipation,  # noqa: F401
+                                      BernoulliParticipation,
+                                      TraceParticipation, TauStats,
+                                      label_correlated_probs, tau_matrix)
+from repro.core.runner import run_fl, FLHistory  # noqa: F401

@@ -1,0 +1,195 @@
+"""FedAvg baselines under device unavailability (paper §3 / Algorithm 2).
+
+  * BiasedFedAvg       — average the *active* devices' updates only. Fast but
+                         biased when availability correlates with data.
+  * FedAvgIS           — importance sampling: weight active updates by 1/p_i.
+                         Unbiased but requires knowing the participation
+                         probabilities (i.i.d. model only).
+  * FedAvgSampling     — the original FedAvg protocol: sample S devices, then
+                         *wait* across rounds until all S have responded; only
+                         then apply a global update (the paper's straggler-prone
+                         baseline, Eq. 3). The global model is frozen while
+                         waiting, so updates from different rounds are computed
+                         at the same w.
+  * SCAFFOLDSampling   — SCAFFOLD control variates on top of the S-device
+                         sampling protocol (paper compares against it in §5.1).
+
+All share MIFA's round API: init_state / round_step(state, params, updates,
+losses, active, eta, rng).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mifa import _bcast
+
+
+@dataclass(frozen=True)
+class BiasedFedAvg:
+    def init_state(self, params, n_clients: int) -> dict:
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def round_step(self, state, params, updates, losses, active, eta, rng=None):
+        act = active.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(act), 1.0)
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(act, u), 0) / denom, updates)
+        new_params = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype),
+                                  params, mean_G)
+        loss = jnp.sum(losses * act) / denom
+        return ({"t": state["t"] + 1}, new_params,
+                {"loss": loss, "n_active": jnp.sum(act)})
+
+
+@dataclass(frozen=True)
+class FedAvgIS:
+    """Requires the true participation probabilities (N,)."""
+
+    probs: tuple  # static tuple so the dataclass stays hashable for jit
+
+    def init_state(self, params, n_clients: int) -> dict:
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def round_step(self, state, params, updates, losses, active, eta, rng=None):
+        act = active.astype(jnp.float32)
+        p = jnp.asarray(self.probs, jnp.float32)
+        w_is = act / p                       # (N,)
+        n = act.shape[0]
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(w_is, u), 0) / n, updates)
+        new_params = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype),
+                                  params, mean_G)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        return ({"t": state["t"] + 1}, new_params,
+                {"loss": loss, "n_active": jnp.sum(act)})
+
+
+@dataclass(frozen=True)
+class FedAvgSampling:
+    """FedAvg with device sampling: wait for the S selected devices."""
+
+    s: int
+
+    def init_state(self, params, n_clients: int) -> dict:
+        return {
+            "selected": jnp.zeros((n_clients,), bool),
+            "received": jnp.zeros((n_clients,), bool),
+            "U": jax.tree.map(
+                lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32),
+                params),
+            "t": jnp.zeros((), jnp.int32),        # communication rounds
+            "t_updates": jnp.zeros((), jnp.int32),  # applied global updates
+            "need_resample": jnp.ones((), bool),
+        }
+
+    def _resample(self, rng, n: int) -> jnp.ndarray:
+        perm = jax.random.permutation(rng, n)
+        mask = jnp.zeros((n,), bool).at[perm[: self.s]].set(True)
+        return mask
+
+    def round_step(self, state, params, updates, losses, active, eta, rng=None):
+        assert rng is not None, "FedAvgSampling needs an rng to sample devices"
+        n = active.shape[0]
+        selected = jnp.where(state["need_resample"],
+                             self._resample(rng, n), state["selected"])
+        received = jnp.where(state["need_resample"],
+                             jnp.zeros_like(state["received"]),
+                             state["received"])
+
+        newly = selected & active & ~received
+        U = jax.tree.map(
+            lambda u_old, u: jnp.where(_bcast(newly, u), u, u_old),
+            state["U"], updates)
+        received = received | newly
+        complete = jnp.all(~selected | received)
+
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(selected.astype(jnp.float32), u), 0)
+            / self.s, U)
+        new_params = jax.tree.map(
+            lambda w, g: jnp.where(complete, (w - eta * g).astype(w.dtype), w),
+            params, mean_G)
+
+        act = active.astype(jnp.float32)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        new_state = {
+            "selected": selected,
+            "received": received,
+            "U": U,
+            "t": state["t"] + 1,
+            "t_updates": state["t_updates"] + complete.astype(jnp.int32),
+            "need_resample": complete,
+        }
+        return new_state, new_params, {
+            "loss": loss, "n_active": jnp.sum(act),
+            "global_updates": new_state["t_updates"].astype(jnp.float32)}
+
+
+@dataclass(frozen=True)
+class SCAFFOLDSampling:
+    """SCAFFOLD (Karimireddy et al. 2020) on the S-device sampling protocol.
+
+    Control variates c_i (per device) and c (server). Clients correct their
+    local gradients with (c − c_i); here, with the update-level API, the
+    corrected update for device i is  u_i − K·(c_i − c)  (option II of the
+    paper, expressed on accumulated gradients), and on completion
+       c_i ← c_i + (u_i/K − c_i)·1[i∈S],   c ← c + (S/N)·mean_{i∈S}(Δc_i).
+    """
+
+    s: int
+    k_steps: int
+
+    def init_state(self, params, n_clients: int) -> dict:
+        zeros_n = lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = FedAvgSampling(self.s).init_state(params, n_clients)
+        st["c_i"] = jax.tree.map(zeros_n, params)
+        st["c"] = jax.tree.map(zeros, params)
+        return st
+
+    def round_step(self, state, params, updates, losses, active, eta, rng=None):
+        assert rng is not None
+        n = active.shape[0]
+        K = float(self.k_steps)
+        # variance-reduced updates
+        vr_updates = jax.tree.map(
+            lambda u, ci, c: u - K * (ci - c[None]), updates,
+            state["c_i"], state["c"])
+
+        base = FedAvgSampling(self.s)
+        sub = {k: state[k] for k in
+               ("selected", "received", "U", "t", "t_updates", "need_resample")}
+        new_sub, new_params, metrics = base.round_step(
+            sub, params, vr_updates, losses, active, eta, rng)
+
+        # on completion, refresh control variates for the selected cohort
+        complete = new_sub["need_resample"]
+        sel = new_sub["selected"]
+        self32 = sel.astype(jnp.float32)
+        # device i's fresh avg gradient estimate = stored U_i / K  + correction
+        c_i_new = jax.tree.map(
+            lambda Ui, ci, c: jnp.where(
+                _bcast(sel & complete, Ui),
+                Ui / K,  # U holds vr update; invert correction below
+                ci),
+            new_sub["U"], state["c_i"], state["c"])
+        # invert the (c - c_i) correction stored inside U
+        c_i_new = jax.tree.map(
+            lambda cin, ci, c: jnp.where(
+                _bcast(sel & complete, cin),
+                cin + (ci - c[None]), cin),
+            c_i_new, state["c_i"], state["c"])
+        dc = jax.tree.map(lambda cin, ci: (cin - ci) * _bcast(self32, cin),
+                          c_i_new, state["c_i"])
+        c_new = jax.tree.map(
+            lambda c, d: jnp.where(complete, c + jnp.sum(d, 0) / n, c),
+            state["c"], dc)
+
+        new_state = dict(new_sub)
+        new_state["c_i"] = jax.tree.map(
+            lambda a, b: jnp.where(complete, a, b), c_i_new, state["c_i"])
+        new_state["c"] = c_new
+        return new_state, new_params, metrics

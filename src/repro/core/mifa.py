@@ -1,0 +1,115 @@
+"""MIFA — Memory-augmented Impatient Federated Averaging (paper Algorithm 1).
+
+Server state: the update array {G^i}_{i=1..N}, stored as a pytree whose leaves
+carry a leading client axis (N, *param_shape) sharded client→data. Each round:
+
+    G^i_t = G^i_{t-1}                  if i ∉ A(t)
+          = (w_t − w^i_{t,K}) / η_t    if i ∈ A(t)      (fresh K-step update)
+    w_{t+1} = w_t − η_t · (1/N) Σ_i G^i_t
+
+Three memory layouts (DESIGN.md §3):
+  * "array"  — paper-faithful float update array (fp32/bf16).
+  * "delta"  — the paper's §4 memory-efficient variant: server keeps only the
+    running mean Ḡ; per-client previous updates are separate state (on-device
+    in a real deployment). Mathematically identical — property-tested.
+  * "int8"   — beyond-paper: stochastically-rounded int8 array.
+
+`round_step` consumes precomputed per-client updates (from
+core.local_update.client_updates), so the aggregation is a pure, kernel-
+replaceable function — `repro.kernels.mifa_aggregate` fuses it on TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantized_memory as qm
+
+
+def _bcast(active: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """active (N,) -> broadcastable to leaf (N, ...)."""
+    return active.reshape((active.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+@dataclass(frozen=True)
+class MIFA:
+    """memory: 'array' | 'delta' | 'int8'; memory_dtype for 'array'."""
+
+    memory: str = "array"
+    memory_dtype: str = "float32"
+
+    # ------------------------------------------------------------------ #
+    def init_state(self, params, n_clients: int) -> dict:
+        def zeros_n(p, dtype):
+            return jnp.zeros((n_clients,) + p.shape, dtype)
+
+        if self.memory == "array":
+            dt = jnp.dtype(self.memory_dtype)
+            return {"G": jax.tree.map(lambda p: zeros_n(p, dt), params),
+                    "t": jnp.zeros((), jnp.int32)}
+        if self.memory == "delta":
+            dt = jnp.dtype(self.memory_dtype)
+            return {"G_prev": jax.tree.map(lambda p: zeros_n(p, dt), params),
+                    "G_bar": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    "t": jnp.zeros((), jnp.int32)}
+        if self.memory == "int8":
+            return {"G_q": jax.tree.map(lambda p: zeros_n(p, jnp.int8), params),
+                    "G_scale": jax.tree.map(
+                        lambda p: jnp.zeros((n_clients,), jnp.float32), params),
+                    "t": jnp.zeros((), jnp.int32)}
+        raise ValueError(self.memory)
+
+    # ------------------------------------------------------------------ #
+    def round_step(self, state: dict, params, updates, losses, active,
+                   eta: jnp.ndarray, rng=None):
+        """updates: pytree (N, ...) f32 — fresh K-step updates for ALL clients
+        (the active mask selects which are used; inactive entries are ignored).
+        """
+        act = active.astype(jnp.float32)
+        n = act.shape[0]
+
+        if self.memory == "array":
+            G = jax.tree.map(
+                lambda g_old, u: jnp.where(_bcast(active, u), u, g_old
+                                           ).astype(g_old.dtype),
+                state["G"], updates)
+            mean_G = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), 0), G)
+            new_state = {"G": G, "t": state["t"] + 1}
+
+        elif self.memory == "delta":
+            # Ḡ_t = Ḡ_{t-1} + (1/N) Σ_{i∈A} (G^i_t − G^i_{t'_i})
+            deltas = jax.tree.map(
+                lambda u, gp: (u - gp.astype(jnp.float32))
+                * _bcast(act, u), updates, state["G_prev"])
+            G_bar = jax.tree.map(lambda gb, d: gb + jnp.sum(d, 0) / n,
+                                 state["G_bar"], deltas)
+            G_prev = jax.tree.map(
+                lambda gp, u: jnp.where(_bcast(active, u), u, gp
+                                        ).astype(gp.dtype),
+                state["G_prev"], updates)
+            mean_G = G_bar
+            new_state = {"G_prev": G_prev, "G_bar": G_bar,
+                         "t": state["t"] + 1}
+
+        elif self.memory == "int8":
+            assert rng is not None, "int8 memory needs an rng for rounding"
+            G_f = qm.dequantize_tree(state["G_q"], state["G_scale"])
+            G_f = jax.tree.map(
+                lambda g_old, u: jnp.where(_bcast(active, u), u, g_old),
+                G_f, updates)
+            G_q, G_scale = qm.quantize_tree(rng, G_f)
+            # re-dequantize so inactive entries stay *exactly* what is stored
+            G_f = qm.dequantize_tree(G_q, G_scale)
+            mean_G = jax.tree.map(lambda g: jnp.mean(g, 0), G_f)
+            new_state = {"G_q": G_q, "G_scale": G_scale, "t": state["t"] + 1}
+        else:
+            raise ValueError(self.memory)
+
+        new_params = jax.tree.map(
+            lambda w, g: (w - eta * g).astype(w.dtype), params, mean_G)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        return new_state, new_params, {"loss": loss,
+                                       "n_active": jnp.sum(act)}

@@ -1,0 +1,150 @@
+"""Device-availability processes A(t) and the paper's τ statistics.
+
+The paper (§3) makes *no distributional assumption* on participation; we provide:
+  * BernoulliParticipation — §5.1 case study (i.i.d. with per-device p_i),
+    including the paper's label-correlated probabilities
+    p_i = p_min * min(j,k)/9 + (1 - p_min).
+  * AdversarialParticipation — deterministic worst-case-style patterns obeying
+    Assumption 4 (τ(t,i) <= t0 + t/b): periodic blackouts with device-specific
+    phase and duty cycle.
+  * TraceParticipation — replay a recorded (T, N) availability matrix.
+
+All processes return the all-active mask at round 0 (paper Remark 5.2 /
+Definition 5.2(1): every device responds in the first round).
+
+τ statistics (Definition 5.1): τ(t,i) = t - max{t' <= t : i in A(t')}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def label_correlated_probs(client_labels: np.ndarray, p_min: float,
+                           n_label_values: int = 10) -> np.ndarray:
+    """Paper §7: label-correlated participation probabilities.
+
+    The paper prints ``p_i = p_min·min(j,k)/9 + (1−p_min)``, but that expression
+    contradicts the surrounding text ("devices holding data of smaller labels
+    participate less frequently"; "p_min controls the lower bound"): at
+    min(j,k)=0 it gives 1−p_min, the *largest* value. We implement the reading
+    consistent with the stated semantics:
+
+        p_i = p_min + (1 − p_min) · min(j,k) / 9
+
+    so min(j,k)=0 ⇒ p_i = p_min (rare stragglers holding the small labels) and
+    min(j,k)=9 ⇒ p_i = 1. client_labels: (N,2) int classes each client holds.
+    """
+    m = np.minimum(client_labels[:, 0], client_labels[:, 1]).astype(np.float64)
+    return p_min + (1.0 - p_min) * m / (n_label_values - 1)
+
+
+class BernoulliParticipation:
+    """i.i.d. Bernoulli participation (Definition 5.2)."""
+
+    def __init__(self, probs: np.ndarray, seed: int = 0):
+        self.probs = np.asarray(probs, np.float64)
+        self.n = len(self.probs)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, t: int) -> np.ndarray:
+        if t == 0:
+            return np.ones(self.n, bool)
+        return self.rng.random(self.n) < self.probs
+
+
+class AdversarialParticipation:
+    """Deterministic periodic blackouts: device i is inactive for `off_i`
+    consecutive rounds out of every `period_i`, with phase `phase_i`.
+
+    With off_i <= t0 this satisfies Assumption 4 for any b. Non-stationary,
+    non-independent — the regime the paper claims (and baselines lack).
+    """
+
+    def __init__(self, n: int, periods: np.ndarray, offs: np.ndarray,
+                 phases: np.ndarray | None = None):
+        self.n = n
+        self.periods = np.asarray(periods, np.int64)
+        self.offs = np.asarray(offs, np.int64)
+        self.phases = (np.zeros(n, np.int64) if phases is None
+                       else np.asarray(phases, np.int64))
+        assert np.all(self.offs < self.periods)
+
+    def sample(self, t: int) -> np.ndarray:
+        if t == 0:
+            return np.ones(self.n, bool)
+        ph = (t + self.phases) % self.periods
+        return ph >= self.offs  # first `off` slots of each period are dark
+
+
+class TraceParticipation:
+    def __init__(self, trace: np.ndarray):
+        self.trace = np.asarray(trace, bool)
+        self.trace[0, :] = True
+        self.n = self.trace.shape[1]
+
+    def sample(self, t: int) -> np.ndarray:
+        return self.trace[min(t, len(self.trace) - 1)]
+
+
+# --------------------------------------------------------------------------- #
+# τ statistics
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class TauStats:
+    """Streaming tracker of the paper's inactivity statistics."""
+
+    n: int
+
+    def __post_init__(self):
+        self.tau = np.zeros(self.n, np.int64)         # current τ(t, i)
+        self.tau_max_per_dev = np.zeros(self.n, np.int64)
+        self.sum_tau = 0.0                            # Σ_t Σ_i τ(t,i)
+        self.sum_tau_sq = 0.0                         # Σ_t Σ_i τ(t,i)^2
+        self.rounds = 0
+        self.history: list[np.ndarray] = []
+
+    def update(self, active: np.ndarray, keep_history: bool = False):
+        """Call once per round *with the round's availability mask* (after the
+        mask is applied: τ=0 for active devices)."""
+        self.tau = np.where(active, 0, self.tau + 1)
+        self.tau_max_per_dev = np.maximum(self.tau_max_per_dev, self.tau)
+        self.sum_tau += float(self.tau.sum())
+        self.sum_tau_sq += float((self.tau.astype(np.float64) ** 2).sum())
+        self.rounds += 1
+        if keep_history:
+            self.history.append(self.tau.copy())
+
+    # Definition 5.1 quantities over the rounds seen so far
+    @property
+    def tau_bar(self) -> float:           # τ̄_T
+        return self.sum_tau / max(self.rounds * self.n, 1)
+
+    @property
+    def tau_max(self) -> int:             # τ_max,T
+        return int(self.tau_max_per_dev.max(initial=0))
+
+    @property
+    def d_bar(self) -> float:             # \bar d_T (App. C)
+        return self.sum_tau_sq / max(self.rounds * self.n, 1)
+
+    @property
+    def d_max_bar(self) -> float:         # \bar d_max,T (App. B)
+        return float((self.tau_max_per_dev.astype(np.float64) ** 2).mean())
+
+    @property
+    def tau_max_bar(self) -> float:       # \bar τ_max,T (App. C)
+        return float(self.tau_max_per_dev.astype(np.float64).mean())
+
+
+def tau_matrix(masks: np.ndarray) -> np.ndarray:
+    """masks (T, N) bool -> τ(t,i) matrix (T, N)."""
+    T, N = masks.shape
+    tau = np.zeros((T, N), np.int64)
+    cur = np.zeros(N, np.int64)
+    for t in range(T):
+        cur = np.where(masks[t], 0, cur + 1)
+        tau[t] = cur
+    return tau

@@ -1,0 +1,50 @@
+"""Int8 update-array storage with per-(client, leaf) scales (beyond-paper).
+
+MIFA's server memory is O(N·d) — the paper acknowledges this is the cost of the
+method (§4). We store G^i in int8 with an absmax scale per client per tensor and
+*stochastic rounding*, which keeps the stored update an unbiased estimator of
+the true update — preserving the bias-correction property MIFA's analysis
+relies on (Assumption 2 asks for unbiased gradients; stochastic rounding adds
+zero-mean bounded noise, effectively enlarging σ² slightly).
+
+Cuts the qwen1.5-110b update array from 13.75 -> 3.44 GB/chip (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_leaf(rng, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (N, ...) f32 -> (q int8 (N, ...), scale f32 (N,)) stochastic rounding."""
+    n = x.shape[0]
+    absmax = jnp.max(jnp.abs(x.reshape(n, -1)), axis=1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    sc = scale.reshape((n,) + (1,) * (x.ndim - 1))
+    y = x / sc
+    lo = jnp.floor(y)
+    frac = y - lo
+    u = jax.random.uniform(rng, x.shape)
+    q = lo + (u < frac).astype(y.dtype)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    sc = scale.reshape((scale.shape[0],) + (1,) * (q.ndim - 1))
+    return q.astype(jnp.float32) * sc
+
+
+def quantize_tree(rng, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    rngs = jax.random.split(rng, len(leaves))
+    qs, scales = [], []
+    for r, leaf in zip(rngs, leaves):
+        q, s = quantize_leaf(r, leaf)
+        qs.append(q)
+        scales.append(s)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales))
+
+
+def dequantize_tree(qtree, stree):
+    return jax.tree.map(dequantize_leaf, qtree, stree)

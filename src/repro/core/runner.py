@@ -1,0 +1,102 @@
+"""Host-side FL training loop: participation process + data + algorithm.
+
+The per-round computation (local K-step SGD on every client + algorithm
+aggregation) is a single jitted function; the availability mask and minibatch
+indices stream in from the host (they are the *environment*, not the model).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.local_update import client_updates
+from repro.core.participation import TauStats
+
+
+@dataclass
+class FLHistory:
+    rounds: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+    eval_loss: list = field(default_factory=list)
+    eval_acc: list = field(default_factory=list)
+    n_active: list = field(default_factory=list)
+    global_updates: list = field(default_factory=list)
+    wall_time: float = 0.0
+    tau_bar: float = 0.0
+    tau_max: int = 0
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("rounds", "train_loss", "eval_loss", "eval_acc", "n_active",
+                 "global_updates", "wall_time", "tau_bar", "tau_max")}
+
+
+def run_fl(*, model, algo, participation, batcher, schedule: Callable,
+           n_rounds: int, eta_local: Callable | float | None = None,
+           weight_decay: float = 0.0, seed: int = 0,
+           eval_fn: Callable | None = None, eval_every: int = 10,
+           params=None, uses_update_clock: bool = False,
+           verbose: bool = False) -> tuple[Any, FLHistory]:
+    """Run T rounds of federated training. Returns (params, history).
+
+    batcher.sample_round(t) -> batch pytree with leaves (N, K, mb, ...).
+    schedule(t) -> server/local learning rate η_t (paper uses the same for both).
+    """
+    rng = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init(rng)
+    n = batcher.n_clients
+    state = algo.init_state(params, n)
+    stats = TauStats(n)
+    hist = FLHistory()
+
+    @jax.jit
+    def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
+        updates, losses = client_updates(model.loss_fn, params, batch,
+                                         eta_loc, K=batcher.k_steps,
+                                         weight_decay=weight_decay)
+        return algo.round_step(state, params, updates, losses, active,
+                               eta_srv, rng)
+
+    t0 = time.time()
+    for t in range(n_rounds):
+        active = participation.sample(t)
+        stats.update(active)
+        batch = batcher.sample_round(t)
+        if uses_update_clock and "t_updates" in state:
+            clock = int(state["t_updates"]) + 1
+        else:
+            clock = t + 1
+        eta_srv = float(schedule(clock))
+        if eta_local is None:
+            eta_loc = eta_srv
+        elif callable(eta_local):
+            eta_loc = float(eta_local(clock))
+        else:
+            eta_loc = float(eta_local)
+        rng, sub = jax.random.split(rng)
+        state, params, metrics = round_fn(
+            state, params, batch, jnp.asarray(active),
+            jnp.float32(eta_loc), jnp.float32(eta_srv), sub)
+
+        hist.rounds.append(t)
+        hist.train_loss.append(float(metrics["loss"]))
+        hist.n_active.append(float(metrics["n_active"]))
+        if "global_updates" in metrics:
+            hist.global_updates.append(float(metrics["global_updates"]))
+        if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
+            el, ea = eval_fn(params)
+            hist.eval_loss.append((t, float(el)))
+            hist.eval_acc.append((t, float(ea)))
+            if verbose:
+                print(f"  round {t:5d} train={hist.train_loss[-1]:.4f} "
+                      f"eval={el:.4f} acc={ea:.4f} active={int(active.sum())}")
+    hist.wall_time = time.time() - t0
+    hist.tau_bar = stats.tau_bar
+    hist.tau_max = stats.tau_max
+    return params, hist

@@ -1,0 +1,3 @@
+from repro.data.synthetic import make_classification  # noqa: F401
+from repro.data.partition import label_skew_partition  # noqa: F401
+from repro.data.pipeline import ClientBatcher, TokenBatcher  # noqa: F401

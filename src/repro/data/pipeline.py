@@ -1,0 +1,65 @@
+"""Deterministic per-client batching for the FL round loop.
+
+`sample_round(t)` yields a pytree whose leaves have shape (N, K, mb, ...):
+one minibatch per client per local step, reproducible from (seed, t).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import make_token_stream
+
+
+class ClientBatcher:
+    """Tabular classification batches: {'x': (N,K,mb,dim), 'y': (N,K,mb)}."""
+
+    def __init__(self, X: np.ndarray, y: np.ndarray,
+                 client_indices: list[np.ndarray], *, batch_size: int,
+                 k_steps: int, seed: int = 0):
+        self.Xs = [X[idx] for idx in client_indices]
+        self.ys = [y[idx] for idx in client_indices]
+        self.n_clients = len(client_indices)
+        self.batch_size = batch_size
+        self.k_steps = k_steps
+        self.seed = seed
+        self.dim = X.shape[1]
+
+    def sample_round(self, t: int) -> dict:
+        mb, K, N = self.batch_size, self.k_steps, self.n_clients
+        xs = np.empty((N, K, mb, self.dim), np.float32)
+        ys = np.empty((N, K, mb), np.int32)
+        for i in range(N):
+            rng = np.random.default_rng((self.seed, t, i))
+            idx = rng.integers(0, len(self.ys[i]), size=(K, mb))
+            xs[i] = self.Xs[i][idx]
+            ys[i] = self.ys[i][idx]
+        return {"x": xs, "y": ys}
+
+
+class TokenBatcher:
+    """LM batches {'tokens': (N,K,mb,seq)} from per-client synthetic streams."""
+
+    def __init__(self, *, n_clients: int, vocab: int, seq_len: int,
+                 batch_size: int, k_steps: int, stream_len: int = 1 << 16,
+                 seed: int = 0):
+        self.streams = [
+            make_token_stream(vocab, stream_len, seed=seed + i,
+                              client_shift=i * (vocab // max(n_clients, 1)))
+            for i in range(n_clients)]
+        self.n_clients = n_clients
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.k_steps = k_steps
+        self.seed = seed
+
+    def sample_round(self, t: int) -> dict:
+        mb, K, N, S = self.batch_size, self.k_steps, self.n_clients, self.seq_len
+        out = np.empty((N, K, mb, S), np.int32)
+        for i in range(N):
+            rng = np.random.default_rng((self.seed, t, i, 7))
+            starts = rng.integers(0, len(self.streams[i]) - S - 1, size=(K, mb))
+            for k in range(K):
+                for b in range(mb):
+                    s = starts[k, b]
+                    out[i, k, b] = self.streams[i][s:s + S]
+        return {"tokens": out}

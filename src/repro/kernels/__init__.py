@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (+ jit wrappers in ops.py, jnp oracles in ref.py)."""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.mifa_aggregate import mifa_aggregate  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401

@@ -1,0 +1,68 @@
+"""Fused MIFA aggregation Pallas kernel.
+
+The aggregation  G ← where(active, U, G);  w ← w − η·mean(G, axis=0)  is purely
+memory-bound: naively it reads G and U, writes G, re-reads G for the mean, and
+writes w — 4·N·M + 2·M element moves. The fused kernel streams each (N, TM)
+column tile through VMEM ONCE: select, accumulate the client mean, and update
+the weight tile in a single pass — 2·N·M + 2·M moves, ~2x less HBM traffic on
+the dominant term (the roofline win for the memory-bound MIFA server step).
+
+Grid: one program per column tile of M (model dimension, flattened). The client
+axis N stays whole inside the tile (N ≤ a few hundred; N·TM·4B ≤ VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(active_ref, eta_ref, g_ref, u_ref, w_ref, g_out_ref, w_out_ref):
+    act = active_ref[...] > 0.5                     # (N, 1)
+    g = jnp.where(act, u_ref[...].astype(g_ref.dtype), g_ref[...])
+    g_out_ref[...] = g
+    mean_g = jnp.mean(g.astype(jnp.float32), axis=0)  # (TM,)
+    eta = eta_ref[0]
+    w_out_ref[...] = (w_ref[...].astype(jnp.float32)
+                      - eta * mean_g).astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def mifa_aggregate(g_old: jnp.ndarray, updates: jnp.ndarray,
+                   active: jnp.ndarray, w: jnp.ndarray, eta,
+                   *, block_m: int = 512, interpret: bool = True):
+    """g_old,updates (N,M); active (N,); w (M,); eta scalar.
+
+    Returns (g_new (N,M) [g_old.dtype], w_new (M,) [w.dtype]).
+    M must be padded to a multiple of block_m by the caller (ops.py does).
+    """
+    n, m = g_old.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+
+    act2 = active.astype(jnp.float32).reshape(n, 1)
+    eta_arr = jnp.asarray([eta], jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),       # active, whole
+            pl.BlockSpec(memory_space=pl.ANY),            # eta scalar
+            pl.BlockSpec((n, bm), lambda i: (0, i)),      # G tile
+            pl.BlockSpec((n, bm), lambda i: (0, i)),      # U tile
+            pl.BlockSpec((bm,), lambda i: (i,)),          # w tile
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bm), lambda i: (0, i)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), g_old.dtype),
+            jax.ShapeDtypeStruct((m,), w.dtype),
+        ],
+        interpret=interpret,
+    )(act2, eta_arr, g_old, updates, w)

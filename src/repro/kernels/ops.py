@@ -1,0 +1,68 @@
+"""Jit'd wrappers binding the Pallas kernels into the framework.
+
+* `mifa_aggregate_tree` — applies the fused aggregation kernel across a whole
+  parameter pytree (flatten each leaf's model dims, pad to the block size).
+* `attention` / `ssd` — drop-in replacements for the jnp paths in
+  repro.models; `use_pallas(True)` flips the model zoo onto the kernels
+  (interpret=True on CPU, compiled on real TPUs).
+
+On this CPU container the kernels run in interpret mode — numerically exact but
+slow — so the model default stays on the jnp paths; tests sweep both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mifa_aggregate import mifa_aggregate
+from repro.kernels.ssd_scan import ssd_scan
+
+_INTERPRET = True  # no TPU in this container
+
+
+def _pad_to(x: jnp.ndarray, m: int, axis: int = -1):
+    size = x.shape[axis]
+    pad = (-size) % m
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
+                        block_m: int = 512):
+    """Fused MIFA aggregation over a pytree.
+
+    g_tree / u_tree: leaves (N, *shape); params: leaves (*shape).
+    Returns (new_g_tree, new_params).
+    """
+    def one(g, u, w):
+        n = g.shape[0]
+        g2, m = _pad_to(g.reshape(n, -1), block_m)
+        u2, _ = _pad_to(u.reshape(n, -1), block_m)
+        w2, _ = _pad_to(w.reshape(-1), block_m)
+        gn, wn = mifa_aggregate(g2, u2, active, w2, eta,
+                                block_m=min(block_m, g2.shape[1]),
+                                interpret=_INTERPRET)
+        return (gn[:, :m].reshape(g.shape), wn[:m].reshape(w.shape))
+
+    out = jax.tree.map(one, g_tree, u_tree, params)
+    g_new = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    p_new = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    return g_new, p_new
+
+
+def attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=_INTERPRET)
+
+
+def ssd(x, dA, B, C, *, chunk=256):
+    return ssd_scan(x, dA, B, C, chunk=chunk, interpret=_INTERPRET)

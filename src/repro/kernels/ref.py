@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mifa_aggregate_ref(g_old: jnp.ndarray, updates: jnp.ndarray,
+                       active: jnp.ndarray, w: jnp.ndarray, eta):
+    """g_old,u (N,M); active (N,); w (M,). Returns (g_new (N,M), w_new (M,))."""
+    act = active.reshape(-1, 1).astype(bool)
+    g_new = jnp.where(act, updates.astype(g_old.dtype), g_old)
+    mean_g = jnp.mean(g_new.astype(jnp.float32), axis=0)
+    w_new = (w.astype(jnp.float32) - eta * mean_g).astype(w.dtype)
+    return g_new, w_new
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """q (B,S,H,hd); k,v (B,T,KV,hd). Exact softmax attention in f32."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+    s = jnp.einsum("bqhk,bthk->bhqt", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqt,bthk->bqhk", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray,
+                 C: jnp.ndarray):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x (b,S,h,p); dA (b,S,h); B,C (b,S,n). Returns (y (b,S,h,p), h_final).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp           # (b,h,p), (b,h), (b,n), (b,n)
+        h = h * jnp.exp(dat)[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", bt, xt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dA.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final

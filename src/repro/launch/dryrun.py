@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------- #
+# Multi-pod dry-run driver (deliverable e).
+#
+# For every (architecture x input shape) pair, lower + compile the appropriate
+# step (train_step for train shapes, serve_step for prefill/decode) on the
+# production mesh — 16x16 single-pod and 2x16x16 multi-pod — and record
+# memory_analysis / cost_analysis / parsed collective schedule into JSON
+# artifacts consumed by EXPERIMENTS.md §Dry-run and §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+#       --shape train_4k --mesh pod
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+# --------------------------------------------------------------------------- #
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import DryrunPlan, Skip, plan
+from repro.models import build_model
+from repro.roofline.analysis import (HW, analyze_compiled, model_flops,
+                                     roofline_terms)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def count_params(arch: str) -> tuple[int, int]:
+    """(total, active) parameter counts from abstract shapes (no allocation)."""
+    import numpy as np
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    inactive = 0
+
+    def walk(tree, path):
+        nonlocal total, inactive
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+            return
+        n = int(np.prod(tree.shape))
+        total += n
+        if "moe" in path and path[-1] in ("w1", "w2", "w3"):
+            frac = 1.0 - cfg.top_k / cfg.n_experts
+            inactive += int(n * frac)
+        elif path[-1] == "embed":
+            inactive += n  # table lookup, not a matmul: no 2/6 flops-per-param
+
+    walk(params, ())
+    return total, total - inactive
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, out_dir: str,
+            overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    p = plan(arch, shape_name, mesh, **(overrides or {}))
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    if overrides:
+        tag += "__" + "_".join(f"{k}-{v}" for k, v in sorted(overrides.items()))
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "overrides": overrides or {}}
+    if isinstance(p, Skip):
+        record["status"] = "skip"
+        record["reason"] = p.reason
+        _save(out_dir, tag, record)
+        print(f"[skip] {tag}: {p.reason}")
+        return record
+
+    try:
+        t0 = time.time()
+        jitted = jax.jit(p.fn, in_shardings=p.in_shardings,
+                         out_shardings=p.out_shardings,
+                         donate_argnums=p.donate_argnums)
+        lowered = jitted.lower(*p.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        analysis = analyze_compiled(compiled)
+        shape = INPUT_SHAPES[shape_name]
+        total, active = count_params(arch)
+        n_chips = mesh.devices.size
+        mf = model_flops(get_config(arch), total, active, shape, p.kind)
+        terms = roofline_terms(analysis)
+        hlo_flops_global = max(analysis["hlo_flops_parsed"],
+                               analysis["cost_analysis_flops"]) * n_chips
+
+        record.update({
+            "status": "ok",
+            "kind": p.kind,
+            "meta": p.meta,
+            "n_chips": n_chips,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "params_total": total,
+            "params_active": active,
+            "analysis": analysis,
+            "roofline": terms,
+            "model_flops": mf,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flops_ratio": (mf / hlo_flops_global
+                                   if hlo_flops_global else None),
+            "hw": HW,
+        })
+        mem = analysis["memory"]
+        print(f"[ok]   {tag}: compile={t2 - t1:.0f}s "
+              f"mem/chip={mem['peak_estimate_bytes'] / 1e9:.2f}GB "
+              f"bottleneck={terms['bottleneck']} "
+              f"t>={terms['step_time_lower_bound_s'] * 1e3:.1f}ms "
+              f"useful={record['useful_flops_ratio'] and round(record['useful_flops_ratio'], 3)}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}")
+    _save(out_dir, tag, record)
+    return record
+
+
+def _save(out_dir: str, tag: str, record: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--memory-dtype", default=None)
+    ap.add_argument("--sequential-clients", default=None,
+                    choices=["true", "false"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--ce-chunk", type=int, default=None)
+    ap.add_argument("--fsdp", default=None, choices=["true", "false"])
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--inner-update-constraint", action="store_true")
+    ap.add_argument("--seq-shard-prefill", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.memory_dtype:
+        overrides["memory_dtype"] = args.memory_dtype
+    if args.sequential_clients:
+        overrides["sequential_clients"] = args.sequential_clients == "true"
+    if args.capacity_factor:
+        overrides["moe_capacity_factor"] = args.capacity_factor
+    if args.ce_chunk is not None:
+        overrides["ce_chunk"] = args.ce_chunk
+    if args.fsdp:
+        overrides["fsdp"] = args.fsdp == "true"
+    if args.pad_heads:
+        overrides["pad_heads"] = True
+    if args.inner_update_constraint:
+        overrides["inner_update_constraint"] = True
+    if args.seq_shard_prefill:
+        overrides["seq_shard_prefill"] = True
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                results.append(run_one(arch, shape, mesh_kind,
+                                       out_dir=args.out,
+                                       overrides=overrides or None))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    fail = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run summary: {ok} ok / {skip} skip / {fail} fail ==")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

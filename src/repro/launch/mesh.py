@@ -1,0 +1,33 @@
+"""Production mesh builders (DESIGN.md §5).
+
+Functions, not module-level constants: importing this module never touches JAX
+device state. The dry-run sets XLA_FLAGS for 512 host devices *before* any JAX
+import; smoke tests and benchmarks see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    The dry-run process exposes 512 host devices; the single-pod mesh takes
+    the first 256 of them.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as _np
+    n = int(_np.prod(shape))
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,223 @@
+"""Dry-run planning: ShapeDtypeStruct inputs + shardings per (arch x shape).
+
+`plan(arch, shape, mesh)` returns a DryrunPlan (step fn, abstract args,
+in/out shardings, donated args) ready for `.lower().compile()`, or a Skip
+with the documented reason (DESIGN.md §4): encoder-only archs have no decode;
+long_500k only runs for sub-quadratic-capable archs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ArchConfig, get_config
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.sharding import rules
+
+
+@dataclass
+class Skip:
+    arch: str
+    shape: str
+    reason: str
+
+
+@dataclass
+class DryrunPlan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple          # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _param_sds(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _train_batch(cfg: ArchConfig, n: int, K: int, mb: int, S: int,
+                 compute_dtype):
+    if cfg.modality == "vision_text":
+        text = S - cfg.n_patches
+        return {"tokens": _sds((n, K, mb, text), jnp.int32),
+                "patches": _sds((n, K, mb, cfg.n_patches, cfg.d_model),
+                                compute_dtype)}
+    if cfg.modality == "audio":
+        return {"frames": _sds((n, K, mb, S, cfg.d_model), compute_dtype),
+                "labels": _sds((n, K, mb, S), jnp.int32)}
+    return {"tokens": _sds((n, K, mb, S), jnp.int32)}
+
+
+def _serve_batch(cfg: ArchConfig, B: int, S: int, compute_dtype):
+    if cfg.modality == "vision_text":
+        return {"tokens": _sds((B, S - cfg.n_patches), jnp.int32),
+                "patches": _sds((B, cfg.n_patches, cfg.d_model),
+                                compute_dtype)}
+    if cfg.modality == "audio":
+        return {"frames": _sds((B, S, cfg.d_model), compute_dtype),
+                "labels": _sds((B, S), jnp.int32)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def plan(arch: str, shape_name: str, mesh, *,
+         memory_dtype: str | None = None,
+         sequential_clients: bool | None = None,
+         moe_capacity_factor: float | None = None,
+         ce_chunk: int | None = None,
+         fsdp: bool | None = None,
+         pad_heads: bool | None = None,
+         inner_update_constraint: bool | None = None,
+         seq_shard_prefill: bool | None = None):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if memory_dtype is not None:
+        cfg = cfg.replace(memory_dtype=memory_dtype)
+    if sequential_clients is not None:
+        cfg = cfg.replace(sequential_clients=sequential_clients)
+    if moe_capacity_factor is not None:
+        cfg = cfg.replace(moe_capacity_factor=moe_capacity_factor)
+    if ce_chunk is not None:
+        cfg = cfg.replace(ce_chunk=ce_chunk)
+    if fsdp is not None:
+        cfg = cfg.replace(fsdp=fsdp)
+    if pad_heads:
+        up = lambda n: ((n + 15) // 16) * 16
+        cfg = cfg.replace(pad_q_heads=up(cfg.n_heads),
+                          pad_kv_heads=up(cfg.n_kv_heads))
+
+    # ---- documented skips (DESIGN.md §4) ----
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return Skip(arch, shape_name,
+                    "encoder-only architecture: no autoregressive decode")
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return Skip(arch, shape_name,
+                    "long_500k requires sub-quadratic attention; "
+                    f"{arch} is full-attention")
+    if shape_name == "long_500k" and cfg.family == "hybrid":
+        # window the shared attention block for the long-context mode
+        cfg = cfg.replace(shared_attn_window=4096)
+
+    dax = rules.data_axes(mesh)
+    n_data = 1
+    for a in dax:
+        n_data *= mesh.shape[a]
+
+    model = build_model(cfg)
+    compute_dtype = model.compute_dtype
+    params_sds = _param_sds(model)
+    pspecs = rules.param_specs(params_sds, cfg, mesh)
+
+    if shape.kind == "train":
+        seq = cfg.sequential_clients
+        n = cfg.fl_clients if seq else n_data
+        K = cfg.fl_local_steps
+        mb = shape.global_batch // (n * K)
+        assert mb >= 1, (arch, shape_name, n, K)
+        mem_dt = jnp.dtype(cfg.memory_dtype)
+        G_sds = jax.tree.map(lambda p: _sds((n,) + p.shape, mem_dt),
+                             params_sds)
+        gspecs = rules.client_state_specs(params_sds, cfg, mesh,
+                                          sequential_clients=seq,
+                                          n_clients=n)
+        batch_sds = _train_batch(cfg, n, K, mb, shape.seq_len, compute_dtype)
+        bspecs = rules.batch_specs(batch_sds, mesh, client_axis=True,
+                                   sequential_clients=seq)
+        active_sds = _sds((n,), jnp.bool_)
+        eta_sds = _sds((), jnp.float32)
+        # NOTE (§Perf H2): constraining per-client updates to the 2-D G
+        # sharding *inside* the client scan makes XLA re-shard activations to
+        # d-over-data with the minibatch replicated — attention/MLP partial
+        # sums then all-reduce at activation size (31.8 TB/chip for llava).
+        # The G out_shardings already enforce final placement; the update
+        # constraint stays off by default (flag kept for the §Perf A/B).
+        update_spec = None
+        if inner_update_constraint is None:
+            inner_update_constraint = cfg.inner_update_constraint
+        if seq and inner_update_constraint:
+            update_spec = _ns(mesh, rules.param_specs(
+                params_sds, cfg.replace(fsdp=True), mesh))
+        fn = steps_lib.make_train_step(model, cfg, n, K,
+                                       update_spec=update_spec)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, gspecs), _ns(mesh, bspecs),
+                 NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, gspecs),
+                  {"loss": NamedSharding(mesh, P())})
+        return DryrunPlan(
+            arch, shape_name, "train", fn,
+            (params_sds, G_sds, batch_sds, active_sds, eta_sds),
+            in_sh, out_sh, donate_argnums=(1,),
+            meta={"n_clients": n, "k_steps": K, "mb": mb,
+                  "sequential": seq, "memory_dtype": cfg.memory_dtype,
+                  "tokens_per_round": shape.global_batch * shape.seq_len})
+
+    B, S = shape.global_batch, shape.seq_len
+    batch_sharded = B % n_data == 0 and B >= n_data
+    bax = dax if batch_sharded else None
+
+    if shape.kind == "prefill":
+        if cfg.encoder_only:
+            fn = steps_lib.make_encoder_step(model)
+            batch_sds = _serve_batch(cfg, B, S, compute_dtype)
+            bspec = jax.tree.map(
+                lambda l: P(*((bax,) + (None,) * (l.ndim - 1))), batch_sds)
+            in_sh = (_ns(mesh, pspecs), _ns(mesh, bspec))
+            out_sh = NamedSharding(mesh, P())
+            return DryrunPlan(arch, shape_name, "encode", fn,
+                              (params_sds, batch_sds), in_sh, out_sh, (),
+                              {"batch": B, "seq": S})
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+        cspecs = rules.cache_specs(cache_sds, cfg, mesh, B)
+        batch_sds = _serve_batch(cfg, B, S, compute_dtype)
+        if seq_shard_prefill:
+            # H2 (§Perf): sequence-parallel prefill — shard the token/seq dim
+            # over `model` so activations stay seq-sharded and attention
+            # gathers (small GQA) K/V instead of all-reducing the residual.
+            bspec = jax.tree.map(
+                lambda l: P(*rules.sanitize(
+                    (bax, rules.MODEL) + (None,) * (l.ndim - 2),
+                    l.shape, mesh)), batch_sds)
+        else:
+            bspec = jax.tree.map(
+                lambda l: P(*((bax,) + (None,) * (l.ndim - 1))), batch_sds)
+        fn = steps_lib.make_prefill_step(model)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, bspec))
+        lspec = P(*rules.sanitize((bax, rules.MODEL), (B, cfg.vocab_size),
+                                  mesh))
+        out_sh = (NamedSharding(mesh, lspec), _ns(mesh, cspecs))
+        return DryrunPlan(arch, shape_name, "prefill", fn,
+                          (params_sds, cache_sds, batch_sds), in_sh, out_sh,
+                          donate_argnums=(1,), meta={"batch": B, "seq": S})
+
+    # decode: one new token against a seq_len cache
+    cache_sds = jax.eval_shape(lambda: model.init_cache(B, S))
+    cspecs = rules.cache_specs(cache_sds, cfg, mesh, B)
+    tokens_sds = _sds((B, 1), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+    fn = steps_lib.make_decode_step(model)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs),
+             NamedSharding(mesh, P(bax, None)), NamedSharding(mesh, P()))
+    lspec = P(*rules.sanitize((bax, rules.MODEL), (B, cfg.vocab_size), mesh))
+    out_sh = (NamedSharding(mesh, lspec), _ns(mesh, cspecs))
+    return DryrunPlan(arch, shape_name, "decode", fn,
+                      (params_sds, cache_sds, tokens_sds, pos_sds),
+                      in_sh, out_sh, donate_argnums=(1,),
+                      meta={"batch": B, "cache_len": S,
+                            "batch_sharded": batch_sharded})

@@ -1,0 +1,95 @@
+"""Distributed step builders: MIFA FL train_step and serve_step per arch.
+
+train_step(params, G, batch, active, eta) -> (params, G, metrics)
+  * vmap mode (default): all clients' local updates computed in parallel —
+    client axis sharded over data/pod (client-parallel simulation).
+  * sequential mode (fsdp archs): lax.scan over clients, each client's K-step
+    update computed with the batch sharded over the data axis (per-client
+    gradients live once, sharded 2-D) — the memory-feasible path for 110B
+    (DESIGN.md §3).
+
+serve_step:
+  * decode: (params, cache, tokens, pos) -> (logits, cache) — ONE new token
+    against a seq_len KV cache (the assigned decode shapes).
+  * prefill: (params, cache, batch) -> (logits, cache).
+  * encoder score (hubert): (params, batch) -> logits.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.local_update import client_updates, device_update
+from repro.models import Model
+
+
+def make_train_step(model: Model, cfg: ArchConfig, n_clients: int,
+                    k_steps: int, update_spec=None) -> Callable:
+    """MIFA round as a pure function (array-memory layout, inlined)."""
+
+    mem_dtype = jnp.dtype(cfg.memory_dtype)
+
+    if not cfg.sequential_clients:
+        def train_step(params, G, batch, active, eta):
+            updates, losses = client_updates(model.loss_fn, params, batch,
+                                             eta, K=k_steps)
+            def sel(g_old, u):
+                act = active.reshape((-1,) + (1,) * (u.ndim - 1))
+                return jnp.where(act, u.astype(g_old.dtype), g_old)
+            G_new = jax.tree.map(sel, G, updates)
+            mean_G = jax.tree.map(
+                lambda g: jnp.mean(g.astype(jnp.float32), axis=0), G_new)
+            params = jax.tree.map(
+                lambda w, g: (w - eta * g).astype(w.dtype), params, mean_G)
+            act = active.astype(jnp.float32)
+            loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+            return params, G_new, {"loss": loss}
+        return train_step
+
+    def train_step(params, G, batch, active, eta):
+        """Sequential clients: scan; per-client grads sharded over the mesh."""
+        def body(acc, xs):
+            g_i, batch_i, a_i = xs
+            u_i, loss_i = device_update(model.loss_fn, params, batch_i, eta)
+            if update_spec is not None:
+                u_i = jax.lax.with_sharding_constraint(u_i, update_spec)
+            def sel(g_old, u):
+                return jnp.where(a_i, u.astype(g_old.dtype), g_old)
+            g_new = jax.tree.map(sel, g_i, u_i)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, g_new)
+            return acc, (g_new, loss_i)
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        accN, (G_new, losses) = jax.lax.scan(body, acc0, (G, batch, active))
+        params = jax.tree.map(
+            lambda w, a: (w - eta * a / n_clients).astype(w.dtype),
+            params, accN)
+        act = active.astype(jnp.float32)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        return params, G_new, {"loss": loss}
+
+    return train_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, tokens, pos, cache)
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, cache, batch):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_encoder_step(model: Model) -> Callable:
+    """Encoder-only 'serving' = a scoring forward pass (no cache)."""
+    def encode_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return metrics["ce"]
+    return encode_step

@@ -1,0 +1,282 @@
+"""Attention: GQA (+RoPE, QKV-bias, sliding window), MLA, decode paths.
+
+Prefill uses a *blockwise* formulation (scan over query blocks) so the (S x S)
+score matrix is never materialized — required for 32k-token prefill. The Pallas
+flash-attention kernel in ``repro.kernels`` is the TPU-tiled version of the same
+contraction; this jnp path is its reference and the default on CPU.
+
+Decode attends a single query over a (possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init, apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# GQA parameters
+# --------------------------------------------------------------------------- #
+
+def gqa_init(rng, d: int, n_heads: int, n_kv: int, head_dim: int,
+             qkv_bias: bool, dtype) -> dict:
+    """Weights kept FLAT (d, H*hd): the fused head dim shards over `model`
+    even when H (or KV) is smaller than the mesh axis (gemma3: 8 heads on a
+    16-way axis; qwen/granite/llava: 8 kv heads). Activations are reshaped to
+    (B,S,H,hd) after the projection matmul."""
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, n_heads * head_dim), dtype),
+        "wk": _dense_init(ks[1], (d, n_kv * head_dim), dtype),
+        "wv": _dense_init(ks[2], (d, n_kv * head_dim), dtype),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_project(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                rope_theta: float, n_heads: int, n_kv: int, head_dim: int):
+    """x (B,S,d) -> q (B,S,H,hd), k,v (B,S,KV,hd) with rope applied to q,k."""
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------- #
+# Blockwise exact attention (prefill)
+# --------------------------------------------------------------------------- #
+
+def _pick_block(s: int, target: int = 512) -> int:
+    if s <= target:
+        return s
+    b = target
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        q_block: int = 0) -> jnp.ndarray:
+    """Exact attention, O(S*block) score memory.
+
+    q (B,S,H,hd); k,v (B,T,KV,hd) with H % KV == 0. ``window``>0 restricts each
+    query to the last `window` keys (inclusive of self); FLOPs are then
+    O(S * (window + block)) instead of O(S*T).
+    Assumes queries and keys share the same absolute positions 0..S-1 (prefill).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    v_hd = v.shape[-1]  # may differ from hd (MLA decompressed values)
+    g = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    bq = q_block or _pick_block(S)
+    n_blocks = S // bq
+    assert n_blocks * bq == S, (S, bq)
+
+    q_scaled = (q * scale).astype(q.dtype)
+    # reshape q to blocks: (nb, B, bq, H, hd)
+    qb = jnp.moveaxis(q_scaled.reshape(B, n_blocks, bq, H, hd), 1, 0)
+
+    use_window = window > 0
+    if use_window:
+        # keys needed by q block starting at qs: [qs - window + 1, qs + bq)
+        span = window + bq  # static slice width
+        pad = window
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def q_block_body(carry, inp):
+        qi, idx = inp
+        qs = idx * bq  # dynamic scalar
+        if use_window:
+            kk = jax.lax.dynamic_slice_in_dim(kp, qs + pad - window, span, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(vp, qs + pad - window, span, axis=1)
+            # absolute key positions for the slice
+            kpos = qs - window + jnp.arange(span)
+        else:
+            kk, vv = k, v
+            kpos = jnp.arange(T)
+        qpos = qs + jnp.arange(bq)
+        scores = jnp.einsum("bqhk,bthk->bhqt",
+                            qi,
+                            jnp.repeat(kk, g, axis=2) if g > 1 else kk,
+                            preferred_element_type=jnp.float32)
+        mask = jnp.ones((bq, kpos.shape[0]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if use_window:
+            mask &= (kpos[None, :] > qpos[:, None] - window) & (kpos[None, :] >= 0)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
+        out = jnp.einsum("bhqt,bthk->bqhk", p,
+                         jnp.repeat(vv, g, axis=2) if g > 1 else vv)
+        return carry, out
+
+    # Remat each q-block: without it, reverse-mode scan saves every block's
+    # (B,H,bq,T) f32 softmax — 34 GB/layer at zamba2 train scale. Recomputing
+    # the block forward during backward is exactly flash-attention's bwd.
+    body = jax.checkpoint(q_block_body) if n_blocks > 1 else q_block_body
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(n_blocks)))
+    # outs (nb, B, bq, H, v_hd) -> (B, S, H, v_hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, v_hd)
+
+
+# --------------------------------------------------------------------------- #
+# Decode attention over a (ring) cache
+# --------------------------------------------------------------------------- #
+
+def decode_attend(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                  pos: jnp.ndarray, *, window: int = 0) -> jnp.ndarray:
+    """q (B,1,H,hd); caches (B,C,KV,hd); pos scalar int32 = current position.
+
+    For window>0 the cache is a ring buffer of size C==window: slot j holds
+    absolute position  pos - ((pos - j) mod C)  (<= pos). Otherwise slot j
+    holds absolute position j, valid iff j <= pos.
+    """
+    B, _, H, hd = q.shape
+    C, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    slots = jnp.arange(C)
+    if window > 0:
+        abs_pos = pos - jnp.mod(pos - slots, C)
+        valid = abs_pos >= 0
+    else:
+        valid = slots <= pos
+    kk = jnp.repeat(k_cache, g, axis=2) if g > 1 else k_cache
+    vv = jnp.repeat(v_cache, g, axis=2) if g > 1 else v_cache
+    scores = jnp.einsum("bqhk,bthk->bhqt", q * scale, kk,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqt,bthk->bqhk", p, vv)
+
+
+def cache_write(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                k_new: jnp.ndarray, v_new: jnp.ndarray, pos: jnp.ndarray,
+                *, window: int = 0):
+    """Write one token's k,v (B,1,KV,hd) at `pos` (ring-buffered if window>0)."""
+    C = k_cache.shape[1]
+    slot = jnp.mod(pos, C) if window > 0 else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    return k_cache, v_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V2): compressed-KV attention
+# --------------------------------------------------------------------------- #
+
+def mla_init(rng, d: int, n_heads: int, kv_lora: int, rope_hd: int,
+             nope_hd: int, v_hd: int, dtype) -> dict:
+    """Flat weight layout (see gqa_init) — fused head dims shard over model."""
+    ks = jax.random.split(rng, 6)
+    return {
+        "wq": _dense_init(ks[0], (d, n_heads * (nope_hd + rope_hd)), dtype),
+        "w_dkv": _dense_init(ks[1], (d, kv_lora), dtype),
+        "w_kpe": _dense_init(ks[2], (d, rope_hd), dtype),
+        "w_uk": _dense_init(ks[3], (kv_lora, n_heads * nope_hd), dtype),
+        "w_uv": _dense_init(ks[4], (kv_lora, n_heads * v_hd), dtype),
+        "wo": _dense_init(ks[5], (n_heads * v_hd, d), dtype),
+    }
+
+
+def mla_compress(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                 rope_theta: float):
+    """x (B,S,d) -> c_kv (B,S,r), k_pe (B,S,rope_hd) [rope applied]."""
+    c_kv = x @ params["w_dkv"]
+    k_pe = (x @ params["w_kpe"])[:, :, None, :]       # (B,S,1,rope_hd)
+    k_pe = apply_rope(k_pe, positions, rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def _mla_dims(params: dict, nope_hd: int):
+    rope_hd = params["w_kpe"].shape[1]
+    H = params["wq"].shape[1] // (nope_hd + rope_hd)
+    v_hd = params["w_uv"].shape[1] // H
+    return H, rope_hd, v_hd
+
+
+def mla_queries(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                rope_theta: float, nope_hd: int):
+    B, S, _ = x.shape
+    H, rope_hd, _ = _mla_dims(params, nope_hd)
+    q = (x @ params["wq"]).reshape(B, S, H, nope_hd + rope_hd)
+    q_nope, q_pe = q[..., :nope_hd], q[..., nope_hd:]
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+    return q_nope, q_pe
+
+
+def mla_prefill(params: dict, x: jnp.ndarray, positions: jnp.ndarray, *,
+                rope_theta: float, nope_hd: int, causal: bool = True) -> tuple:
+    """Returns (out (B,S,d), (c_kv, k_pe) for caching)."""
+    B, S, _ = x.shape
+    H, rope_hd, v_hd = _mla_dims(params, nope_hd)
+    c_kv, k_pe = mla_compress(params, x, positions, rope_theta)
+    q_nope, q_pe = mla_queries(params, x, positions, rope_theta, nope_hd)
+    # decompress keys/values (prefill only; decode uses the absorbed form)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, nope_hd)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, v_hd)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, rope_hd))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    ctx = blockwise_attention(q_full, k_full, v, causal=causal)
+    out = ctx.reshape(B, S, H * v_hd) @ params["wo"]
+    return out, (c_kv, k_pe)
+
+
+def mla_decode(params: dict, x: jnp.ndarray, pos: jnp.ndarray,
+               c_cache: jnp.ndarray, pe_cache: jnp.ndarray, *,
+               rope_theta: float, nope_hd: int):
+    """Absorbed single-token MLA decode.
+
+    x (B,1,d); c_cache (B,C,r), pe_cache (B,C,rope_hd). Returns (out (B,1,d),
+    updated caches). Scores are computed in the compressed space:
+      score = (W_uk^T q_nope) . c  +  q_pe . k_pe
+    and the context is re-expanded once per step: o = W_uv (sum_t p_t c_t).
+    """
+    positions = pos[None]  # (1,) broadcast over batch
+    c_new, pe_new = mla_compress(params, x, positions, rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), pos, axis=1)
+    pe_cache = jax.lax.dynamic_update_slice_in_dim(
+        pe_cache, pe_new.astype(pe_cache.dtype), pos, axis=1)
+
+    q_nope, q_pe = mla_queries(params, x, positions, rope_theta, nope_hd)
+    B = x.shape[0]
+    H, rope_hd, v_hd = _mla_dims(params, nope_hd)
+    r = c_cache.shape[-1]
+    w_uk = params["w_uk"].reshape(r, H, nope_hd)
+    w_uv = params["w_uv"].reshape(r, H, v_hd)
+    scale = 1.0 / np.sqrt(nope_hd + rope_hd)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)            # (B,1,H,r)
+    scores = (jnp.einsum("bshr,btr->bhst", q_c, c_cache)
+              + jnp.einsum("bshk,btk->bhst", q_pe, pe_cache)) * scale
+    valid = jnp.arange(c_cache.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bhst,btr->bshr", p, c_cache)            # (B,1,H,r)
+    ctx = jnp.einsum("bshr,rhk->bshk", ctx_c, w_uv)             # (B,1,H,v_hd)
+    out = ctx.reshape(B, 1, H * v_hd) @ params["wo"]
+    return out, (c_cache, pe_cache)

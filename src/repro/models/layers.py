@@ -1,0 +1,139 @@
+"""Shared neural-net layers: norms, rope, mlp, embeddings, losses.
+
+Pure-functional: params are nested dicts of jnp arrays; every function takes
+(params, inputs) and returns outputs. Initializers take an explicit rng.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(rng, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------------- #
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]              # (..., S, 1, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU MLP
+# --------------------------------------------------------------------------- #
+
+def mlp_init(rng, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w1": _dense_init(k1, (d, f), dtype),
+        "w3": _dense_init(k2, (d, f), dtype),
+        "w2": _dense_init(k3, (f, d), dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+
+def embed_init(rng, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return _dense_init(rng, (vocab, d), dtype, scale=0.02)
+
+
+def head_init(rng, d: int, vocab: int, dtype) -> jnp.ndarray:
+    return _dense_init(rng, (d, vocab), dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Losses
+# --------------------------------------------------------------------------- #
+
+def chunked_lm_loss(h: jnp.ndarray, lm_head: jnp.ndarray,
+                    labels: jnp.ndarray, mask: jnp.ndarray | None = None,
+                    chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy without materializing the full (B,S,V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside the
+    (rematerialized) scan body, so peak memory is O(B·chunk·V) instead of
+    O(B·S·V) — the dominant training-memory term for 50k-262k vocabularies.
+    lm_head gradients accumulate across chunks via the scan's reverse pass.
+    """
+    B, S, d = h.shape
+    cs = min(chunk, S)
+    while S % cs:
+        cs //= 2
+    nc = S // cs
+    hc = jnp.moveaxis(h.reshape(B, nc, cs, d), 1, 0)          # (nc,B,cs,d)
+    lc = jnp.moveaxis(labels.reshape(B, nc, cs), 1, 0)
+    if mask is None:
+        mc = jnp.ones((nc, B, cs), jnp.float32)
+    else:
+        mc = jnp.moveaxis(mask.reshape(B, nc, cs), 1, 0).astype(jnp.float32)
+
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        hh, ll, mm = inp
+        logits = (hh @ lm_head.astype(hh.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum((lse - gold) * mm)
+        cnt = cnt + jnp.sum(mm)
+        return (nll_sum, cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.float32)),
+                                 (hc, lc, mc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean CE over masked positions. logits (..., V) any float dtype; f32 math."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,193 @@
+"""Public model API: init / loss_fn / prefill / decode_step for every family.
+
+`Model` wraps an ArchConfig. Batch formats by modality:
+  text:    {'tokens': (B,S) int32}
+  vision_text: {'tokens': (B,S_text) int32, 'patches': (B,P,d)}  (stub frontend)
+  audio:   {'frames': (B,S,d), 'labels': (B,S) int32}            (stub frontend)
+  tabular: {'x': (B,d) float32, 'y': (B,) int32}                 (paper models)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import transformer
+from repro.models.layers import (_dense_init, chunked_lm_loss, embed_init,
+                                 head_init, rmsnorm, rmsnorm_init,
+                                 softmax_cross_entropy)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.param_dtype = _dtype(cfg.param_dtype)
+        self.compute_dtype = _dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------ #
+    # init
+    # ------------------------------------------------------------------ #
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        if cfg.family == "tabular":
+            return self._init_tabular(rng)
+        ks = jax.random.split(rng, 5)
+        params = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                self.param_dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, self.param_dtype),
+            "lm_head": head_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                 self.param_dtype),
+        }
+        params.update(transformer.init_segments(ks[2], cfg, self.param_dtype))
+        if cfg.modality == "audio":
+            params["frontend_proj"] = _dense_init(
+                ks[3], (cfg.d_model, cfg.d_model), self.param_dtype)
+        return params
+
+    def _init_tabular(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, max(cfg.n_layers + 1, 2))
+        if cfg.n_layers == 0:  # logistic regression
+            return {"w": jnp.zeros((cfg.d_model, cfg.vocab_size), jnp.float32),
+                    "b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+        layers = []
+        d_in = cfg.d_model
+        for i in range(cfg.n_layers):
+            layers.append({"w": _dense_init(ks[i], (d_in, cfg.d_ff), jnp.float32),
+                           "b": jnp.zeros((cfg.d_ff,), jnp.float32)})
+            d_in = cfg.d_ff
+        return {"layers": layers,
+                "out": {"w": _dense_init(ks[-1], (d_in, cfg.vocab_size),
+                                         jnp.float32),
+                        "b": jnp.zeros((cfg.vocab_size,), jnp.float32)}}
+
+    # ------------------------------------------------------------------ #
+    # embedding / input assembly
+    # ------------------------------------------------------------------ #
+    def _embed_inputs(self, params: dict, batch: dict):
+        """Returns (x (B,S,d), labels (B,S') or None, logits_slice)."""
+        cfg = self.cfg
+        if cfg.modality == "vision_text":
+            patches = batch["patches"].astype(self.compute_dtype)
+            tok_emb = params["embed"][batch["tokens"]].astype(self.compute_dtype)
+            x = jnp.concatenate([patches, tok_emb], axis=1)
+            return x
+        if cfg.modality == "audio":
+            x = batch["frames"].astype(self.compute_dtype)
+            return x @ params["frontend_proj"].astype(self.compute_dtype)
+        return params["embed"][batch["tokens"]].astype(self.compute_dtype)
+
+    # ------------------------------------------------------------------ #
+    # training loss
+    # ------------------------------------------------------------------ #
+    def loss_fn(self, params: dict, batch: dict):
+        cfg = self.cfg
+        if cfg.family == "tabular":
+            return self._loss_tabular(params, batch)
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)
+        h, aux = transformer.forward(params, x, positions, cfg)
+        h = rmsnorm(params["final_norm"], h)
+
+        if cfg.ce_chunk:
+            labels, mask = self._labels_mask(batch, S)
+            ce = chunked_lm_loss(h, params["lm_head"], labels, mask,
+                                 chunk=cfg.ce_chunk)
+        else:
+            logits = h @ params["lm_head"].astype(h.dtype)
+            if cfg.modality == "audio":
+                ce = softmax_cross_entropy(logits, batch["labels"])
+            elif cfg.modality == "vision_text":
+                P = cfg.n_patches
+                ce = softmax_cross_entropy(logits[:, P:-1],
+                                           batch["tokens"][:, 1:])
+            else:
+                ce = softmax_cross_entropy(logits[:, :-1],
+                                           batch["tokens"][:, 1:])
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    def _labels_mask(self, batch: dict, S: int):
+        """Full-length (B,S) labels + validity mask for the chunked CE."""
+        cfg = self.cfg
+        if cfg.modality == "audio":
+            return batch["labels"], jnp.ones_like(batch["labels"],
+                                                  jnp.float32)
+        tokens = batch["tokens"]
+        B, St = tokens.shape
+        P = cfg.n_patches if cfg.modality == "vision_text" else 0
+        pad = jnp.zeros((B, 1), tokens.dtype)
+        shifted = jnp.concatenate([tokens[:, 1:], pad], axis=1)   # (B,St)
+        if P:
+            labels = jnp.concatenate(
+                [jnp.zeros((B, P), tokens.dtype), shifted], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((B, P)), jnp.ones((B, St - 1)),
+                 jnp.zeros((B, 1))], axis=1)
+        else:
+            labels = shifted
+            mask = jnp.concatenate(
+                [jnp.ones((B, St - 1)), jnp.zeros((B, 1))], axis=1)
+        return labels, mask
+
+    def _tabular_logits(self, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        if self.cfg.n_layers == 0:
+            return x @ params["w"] + params["b"]
+        h = x
+        for lp in params["layers"]:
+            h = jax.nn.relu(h @ lp["w"] + lp["b"])
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+    def _loss_tabular(self, params: dict, batch: dict):
+        logits = self._tabular_logits(params, batch["x"])
+        ce = softmax_cross_entropy(logits, batch["y"])
+        return ce, {"loss": ce, "ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def accuracy(self, params: dict, batch: dict) -> jnp.ndarray:
+        logits = self._tabular_logits(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+    # ------------------------------------------------------------------ #
+    # serving
+    # ------------------------------------------------------------------ #
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        return transformer.init_cache(self.cfg, batch, cache_len,
+                                      self.compute_dtype)
+
+    def prefill(self, params: dict, batch: dict, cache: dict):
+        """Returns (last-position logits (B,V), cache)."""
+        cfg = self.cfg
+        assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        h, _, cache = transformer.prefill(params, x, positions, cache, cfg)
+        h = rmsnorm(params["final_norm"], h[:, -1:])
+        logits = (h @ params["lm_head"].astype(h.dtype))[:, 0]
+        return logits, cache
+
+    def decode_step(self, params: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
+                    cache: dict):
+        """tokens (B,1) int32; pos scalar int32. Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.compute_dtype)
+        h, _, cache = transformer.decode(params, x, pos, cache, cfg)
+        h = rmsnorm(params["final_norm"], h)
+        logits = (h @ params["lm_head"].astype(h.dtype))[:, 0]
+        return logits, cache
+
+    # ------------------------------------------------------------------ #
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts block: top-k router + sort-based capacity dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of a dense one-hot dispatch tensor
+(T x E x C — infeasible at 1M tokens) we sort token assignments by expert id
+and gather into an (E, C, d) buffer, run the per-expert SwiGLU as a single
+batched einsum over the expert axis (expert-parallel: E is sharded over the
+`model` mesh axis, so the gather/scatter lower to all-to-all-style collectives),
+then scatter-add the gated outputs back. Tokens beyond an expert's capacity
+C = ceil(T*k/E * capacity_factor) are dropped (standard TPU MoE practice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init
+
+
+def moe_init(rng, d: int, f: int, n_experts: int, n_shared: int, dtype) -> dict:
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, n_experts), jnp.float32, scale=0.02),
+        "w1": _dense_init(ks[1], (n_experts, d, f), dtype),
+        "w3": _dense_init(ks[2], (n_experts, d, f), dtype),
+        "w2": _dense_init(ks[3], (n_experts, f, d), dtype),
+    }
+    if n_shared:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": _dense_init(kk[0], (d, f * n_shared), dtype),
+            "w3": _dense_init(kk[1], (d, f * n_shared), dtype),
+            "w2": _dense_init(kk[2], (f * n_shared, d), dtype),
+        }
+    return p
+
+
+def moe_apply(params: dict, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25,
+              aux_coef: float = 0.01) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E = params["router"].shape[-1]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])        # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # (T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = aux_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    A = T * top_k
+    flat_expert = expert_ids.reshape(A)                          # assignment -> expert
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+    flat_gate = gate_vals.reshape(A)
+
+    order = jnp.argsort(flat_expert)                             # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position of each assignment within its expert's run
+    counts = jnp.bincount(flat_expert, length=E)                 # (E,)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(A) - offsets[sorted_expert]
+
+    C = int(np.ceil(A / E * capacity_factor))
+    keep = pos_in_expert < C
+    # scatter token ids into the (E, C) routing table; dropped slots -> T (pad row)
+    table = jnp.full((E, C), T, dtype=jnp.int32)
+    table = table.at[sorted_expert, jnp.minimum(pos_in_expert, C - 1)].set(
+        jnp.where(keep, sorted_token, T), mode="drop")
+    gates = jnp.zeros((E, C), dtype=jnp.float32)
+    gates = gates.at[sorted_expert, jnp.minimum(pos_in_expert, C - 1)].set(
+        jnp.where(keep, sorted_gate, 0.0), mode="drop")
+
+    # gather tokens (pad row of zeros at index T)
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xpad[table]                                             # (E,C,d)
+
+    # per-expert SwiGLU
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w2"])             # (E,C,d)
+
+    # combine: scatter-add gated outputs back to tokens
+    y = jnp.zeros((T + 1, d), ye.dtype)
+    y = y.at[table.reshape(-1)].add(
+        (ye * gates[..., None].astype(ye.dtype)).reshape(E * C, d))
+    y = y[:T]
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(xt @ sh["w1"]) * (xt @ sh["w3"])
+        y = y + hs @ sh["w2"]
+
+    return y.reshape(B, S, d), aux

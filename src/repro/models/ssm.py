@@ -1,0 +1,187 @@
+"""Mamba2 (SSD — state-space duality) block: chunked prefill scan + O(1) decode.
+
+TPU adaptation: the chunked SSD algorithm (arXiv:2405.21060 §6) is implemented
+with MXU-friendly einsums — intra-chunk quadratic attention-like contractions of
+size (chunk x chunk) plus an inter-chunk `lax.scan` over the running state.
+The Pallas `ssd_scan` kernel tiles the same computation for VMEM; this jnp path
+is its oracle and the CPU default. Single SSM group (G=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init
+
+
+def mamba2_dims(d_model: int, expand: int, headdim: int, d_state: int,
+                conv_width: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state          # conv over [x, B, C]
+    proj_dim = 2 * d_inner + 2 * d_state + n_heads  # z, x, B, C, dt
+    return d_inner, n_heads, conv_ch, proj_dim
+
+
+def mamba2_init(rng, d_model: int, expand: int, headdim: int, d_state: int,
+                conv_width: int, dtype) -> dict:
+    d_inner, n_heads, conv_ch, proj_dim = mamba2_dims(
+        d_model, expand, headdim, d_state, conv_width)
+    ks = jax.random.split(rng, 4)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32)
+                 * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, proj_dim), dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": _dense_init(ks[3], (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * d_state]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc (B,S,C); w (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _segsum_exp(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., q) -> L (..., q, q) with L[i,j] = exp(sum_{j<k<=i} a_k), lower-tri."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+                chunk: int, h0: jnp.ndarray | None = None):
+    """Chunked SSD: lax.scan over chunks, one chunk's intermediates live at a
+    time (the (b,h,Q,Q) decay matrix L would otherwise materialize for every
+    chunk simultaneously — 1.1 TB/chip for zamba2 at train_4k). The scan body
+    is rematerialized on the backward pass; only the (b,h,p,n) carried state
+    is saved per chunk. All state math in float32.
+
+    x (b,S,h,p); dA (b,S,h) [= dt*A, negative]; B,C (b,S,n). Returns
+    (y (b,S,h,p), h_final (b,h,p,n)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    # chunk-major stacks: (nc, b, Q, ...)
+    xc = jnp.moveaxis(x.reshape(b, nc, Q, H, P), 1, 0)
+    dAc = jnp.moveaxis(dA.reshape(b, nc, Q, H).astype(jnp.float32), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, Q, N).astype(jnp.float32), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, nc, Q, N).astype(jnp.float32), 1, 0)
+
+    h_init = (jnp.zeros((b, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def chunk_body(h, inp):
+        xq, daq, bq, cq = inp            # (b,Q,h,p) (b,Q,h) (b,Q,n) (b,Q,n)
+        xq = xq.astype(jnp.float32)
+        cum = jnp.cumsum(daq, axis=1)                    # (b,Q,h)
+        L = _segsum_exp(jnp.moveaxis(daq, -1, -2))       # (b,h,Q,Q)
+        att = jnp.einsum("bqn,bkn->bqk", cq, bq)         # (b,Q,Q)
+        y = jnp.einsum("bqk,bhqk,bkhp->bqhp", att, L, xq)
+        # contribution of carried state
+        y = y + jnp.einsum("bqn,bhpn,bqh->bqhp", cq, h, jnp.exp(cum))
+        # state update
+        decay = jnp.exp(cum[:, -1:, :] - cum)            # (b,Q,h)
+        h_new = (h * jnp.exp(cum[:, -1, :])[..., None, None]
+                 + jnp.einsum("bqn,bqh,bqhp->bhpn", bq, decay, xq))
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h_init,
+                               (xc, dAc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P).astype(x.dtype)
+    return y, h_final
+
+
+def mamba2_prefill(params: dict, x: jnp.ndarray, *, expand: int, headdim: int,
+                   d_state: int, chunk: int, conv_width: int):
+    """x (B,S,d) -> (y (B,S,d), (ssm_state (B,H,P,N), conv_state (B,W-1,C)))."""
+    Bsz, S, d_model = x.shape
+    d_inner, n_heads, conv_ch, _ = mamba2_dims(d_model, expand, headdim,
+                                               d_state, conv_width)
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    conv_state = xbc[:, -(conv_width - 1):, :] if S >= conv_width - 1 else \
+        jnp.pad(xbc, ((0, 0), (conv_width - 1 - S, 0), (0, 0)))
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_inner].reshape(Bsz, S, n_heads, headdim)
+    Bmat = xbc[..., d_inner:d_inner + d_state]
+    Cmat = xbc[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    y, h_final = ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                             dt * A, Bmat, Cmat, chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(Bsz, S, d_inner)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    return y @ params["out_proj"], (h_final, conv_state)
+
+
+def mamba2_decode(params: dict, x: jnp.ndarray, ssm_state: jnp.ndarray,
+                  conv_state: jnp.ndarray, *, expand: int, headdim: int,
+                  d_state: int, conv_width: int):
+    """Single-token recurrent step.
+
+    x (B,1,d); ssm_state (B,H,P,N) f32; conv_state (B,W-1,conv_ch).
+    Returns (y (B,1,d), (ssm_state, conv_state)).
+    """
+    Bsz, _, d_model = x.shape
+    d_inner, n_heads, conv_ch, _ = mamba2_dims(d_model, expand, headdim,
+                                               d_state, conv_width)
+    proj = (x @ params["in_proj"])[:, 0]                  # (B, proj)
+    z, xbc, dt = _split_proj(proj, d_inner, d_state, n_heads)
+
+    # conv: append new channel vector, take causal window
+    win = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_state = win[:, 1:, :]
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    xs = xbc[:, :d_inner].reshape(Bsz, n_heads, headdim)
+    Bv = xbc[:, d_inner:d_inner + d_state].astype(jnp.float32)
+    Cv = xbc[:, d_inner + d_state:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                              # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv, xs.astype(jnp.float32))
+    ssm_state = ssm_state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cv)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z[:, None, :], params["norm_scale"])
+    return y @ params["out_proj"], (ssm_state, conv_state)

@@ -1,0 +1,424 @@
+"""Layer-stack assembly: segments of homogeneous blocks scanned with lax.scan.
+
+A model is a sequence of *segments*; each segment is a maximal run of layers
+with identical (block kind, ffn kind). Segment parameters are stacked along a
+leading layer axis and executed with ``lax.scan`` so the HLO stays compact for
+80-layer models (critical for CPU-side dry-run compile times). Mixed patterns
+(gemma3's 5 local : 1 global, zamba2's shared-attention insertions) become
+short segment lists. Zamba2's shared attention block is stored once at the top
+level and referenced by every `shared_attn` segment.
+
+Block kinds: 'attn' (GQA full), 'local_attn' (GQA sliding window),
+'mla' (DeepSeek compressed-KV), 'ssm' (Mamba2), 'shared_attn'.
+FFN kinds: 'mlp', 'moe', None.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+def _radd(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Residual add that preserves the activation dtype."""
+    return x + y.astype(x.dtype)
+
+
+def _attn_out(ctx: jnp.ndarray, wo: jnp.ndarray) -> jnp.ndarray:
+    B, S, H, hd = ctx.shape
+    return ctx.reshape(B, S, H * hd) @ wo
+
+
+def _gqa(lp, h, positions, cfg, pad: bool = True):
+    q, k, v = attn_lib.gqa_project(lp["attn"], h, positions, cfg.rope_theta,
+                                   cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim)
+    if not pad:
+        return q, k, v
+    if cfg.pad_q_heads and cfg.pad_q_heads > cfg.n_heads:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, cfg.pad_q_heads - cfg.n_heads),
+                        (0, 0)))
+    if cfg.pad_kv_heads and cfg.pad_kv_heads > cfg.n_kv_heads:
+        pad = cfg.pad_kv_heads - cfg.n_kv_heads
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return q, k, v
+
+
+def _unpad_ctx(ctx, cfg):
+    if cfg.pad_q_heads and cfg.pad_q_heads > cfg.n_heads:
+        return ctx[:, :, :cfg.n_heads, :]
+    return ctx
+
+
+def _unpad_kv(k, v, cfg):
+    """Caches store the real (unpadded) kv heads."""
+    if cfg.pad_kv_heads and cfg.pad_kv_heads > cfg.n_kv_heads:
+        return k[:, :, :cfg.n_kv_heads, :], v[:, :, :cfg.n_kv_heads, :]
+    return k, v
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    index: int
+    kind: str        # attn | local_attn | mla | ssm | shared_attn
+    ffn: str | None  # mlp | moe | None
+    n_layers: int
+    window: int = 0  # >0 for local_attn
+
+
+def build_segments(cfg: ArchConfig) -> list[SegmentSpec]:
+    specs: list[tuple[str, str | None, int]] = []
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        if kind == "attn" and cfg.kv_lora_rank:
+            kind = "mla"
+        if kind in ("ssm", "shared_attn"):
+            ffn = None
+        elif cfg.is_moe and i >= cfg.first_dense_layers:
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        if kind == "local_attn":
+            window = cfg.swa_window
+        elif kind == "shared_attn":
+            window = cfg.shared_attn_window
+        else:
+            window = 0
+        specs.append((kind, ffn, window))
+
+    segments: list[SegmentSpec] = []
+    run_start = 0
+    for i in range(1, len(specs) + 1):
+        if i == len(specs) or specs[i] != specs[run_start]:
+            kind, ffn, window = specs[run_start]
+            segments.append(SegmentSpec(len(segments), kind, ffn,
+                                        i - run_start, window))
+            run_start = i
+    return segments
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init
+# --------------------------------------------------------------------------- #
+
+def _layer_init(rng, spec: SegmentSpec, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict = {}
+    if spec.kind in ("attn", "local_attn", "shared_attn"):
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = attn_lib.gqa_init(ks[0], cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.resolved_head_dim,
+                                      cfg.qkv_bias, dtype)
+    elif spec.kind == "mla":
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = attn_lib.mla_init(ks[0], cfg.d_model, cfg.n_heads,
+                                      cfg.kv_lora_rank, cfg.rope_head_dim,
+                                      cfg.nope_head_dim, cfg.v_head_dim, dtype)
+    elif spec.kind == "ssm":
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = ssm_lib.mamba2_init(ks[0], cfg.d_model, cfg.ssm_expand,
+                                         cfg.ssm_headdim, cfg.ssm_state,
+                                         cfg.ssm_conv_width, dtype)
+    ffn = "mlp" if spec.kind == "shared_attn" else spec.ffn
+    if ffn == "mlp":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["moe"] = moe_lib.moe_init(ks[1], cfg.d_model, cfg.expert_d_ff,
+                                    cfg.n_experts, cfg.n_shared_experts, dtype)
+    return p
+
+
+def init_segments(rng, cfg: ArchConfig, dtype) -> dict:
+    """Returns {'segments': {str(i): stacked params}, 'shared_attn': ...?}."""
+    out: dict = {"segments": {}}
+    segments = build_segments(cfg)
+    rngs = jax.random.split(rng, len(segments) + 1)
+    need_shared = any(s.kind == "shared_attn" for s in segments)
+    if need_shared:
+        shared_spec = next(s for s in segments if s.kind == "shared_attn")
+        out["shared_attn"] = _layer_init(rngs[-1], shared_spec, cfg, dtype)
+    for seg, r in zip(segments, rngs[:-1]):
+        if seg.kind == "shared_attn":
+            out["segments"][str(seg.index)] = {}  # parameters live at top level
+            continue
+        layer_rngs = jax.random.split(r, seg.n_layers)
+        out["segments"][str(seg.index)] = jax.vmap(
+            lambda k: _layer_init(k, seg, cfg, dtype))(layer_rngs)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Single-layer forward (no cache: training / scoring)
+# --------------------------------------------------------------------------- #
+
+def _layer_fwd(lp: dict, x: jnp.ndarray, positions: jnp.ndarray, aux,
+               spec: SegmentSpec, cfg: ArchConfig):
+    if spec.kind in ("attn", "local_attn", "shared_attn"):
+        h = rmsnorm(lp["ln1"], x)
+        q, k, v = _gqa(lp, h, positions, cfg)
+        ctx = attn_lib.blockwise_attention(q, k, v, causal=cfg.causal,
+                                           window=spec.window)
+        x = _radd(x, _attn_out(_unpad_ctx(ctx, cfg), lp["attn"]["wo"]))
+    elif spec.kind == "mla":
+        h = rmsnorm(lp["ln1"], x)
+        out, _ = attn_lib.mla_prefill(lp["attn"], h, positions,
+                                      rope_theta=cfg.rope_theta,
+                                      nope_hd=cfg.nope_head_dim,
+                                      causal=cfg.causal)
+        x = _radd(x, out)
+    elif spec.kind == "ssm":
+        h = rmsnorm(lp["ln1"], x)
+        out, _ = ssm_lib.mamba2_prefill(lp["mixer"], h, expand=cfg.ssm_expand,
+                                        headdim=cfg.ssm_headdim,
+                                        d_state=cfg.ssm_state,
+                                        chunk=cfg.ssm_chunk,
+                                        conv_width=cfg.ssm_conv_width)
+        x = _radd(x, out)
+
+    ffn = "mlp" if spec.kind == "shared_attn" else spec.ffn
+    if ffn == "mlp":
+        x = _radd(x, mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x)))
+    elif ffn == "moe":
+        y, a = moe_lib.moe_apply(lp["moe"], rmsnorm(lp["ln2"], x),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.moe_capacity_factor,
+                                 aux_coef=cfg.router_aux_coef)
+        x = _radd(x, y)
+        aux = aux + a
+    return x, aux
+
+
+def forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+            cfg: ArchConfig):
+    """Run all segments. x (B,S,d) -> (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    for seg in build_segments(cfg):
+        if seg.kind == "shared_attn":
+            body = lambda xa, lp=params["shared_attn"]: _layer_fwd(
+                lp, xa[0], positions, xa[1], seg, cfg)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, aux = body((x, aux))
+            continue
+
+        seg_params = params["segments"][str(seg.index)]
+
+        def scan_body(carry, lp, seg=seg):
+            xx, aa = carry
+            xx, aa = _layer_fwd(lp, xx, positions, aa, seg, cfg)
+            return (xx, aa), None
+
+        if cfg.remat:
+            scan_body = jax.checkpoint(scan_body)
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux), seg_params)
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# Prefill (emit caches) and decode (consume caches)
+# --------------------------------------------------------------------------- #
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> dict:
+    """Zero caches for every segment, stacked along the segment's layer axis."""
+    cache: dict = {}
+    hd = cfg.resolved_head_dim
+    for seg in build_segments(cfg):
+        n = seg.n_layers
+        if seg.kind in ("attn", "shared_attn"):
+            c = min(seg.window, cache_len) if seg.window else cache_len
+            shp = (n, batch, c, cfg.n_kv_heads, hd) if seg.kind == "attn" else \
+                  (batch, c, cfg.n_kv_heads, hd)
+            cache[str(seg.index)] = {"k": jnp.zeros(shp, dtype),
+                                     "v": jnp.zeros(shp, dtype)}
+        elif seg.kind == "local_attn":
+            c = min(cfg.swa_window, cache_len)
+            cache[str(seg.index)] = {
+                "k": jnp.zeros((n, batch, c, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((n, batch, c, cfg.n_kv_heads, hd), dtype)}
+        elif seg.kind == "mla":
+            cache[str(seg.index)] = {
+                "c": jnp.zeros((n, batch, cache_len, cfg.kv_lora_rank), dtype),
+                "pe": jnp.zeros((n, batch, cache_len, cfg.rope_head_dim), dtype)}
+        elif seg.kind == "ssm":
+            d_inner, n_heads, conv_ch, _ = ssm_lib.mamba2_dims(
+                cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state,
+                cfg.ssm_conv_width)
+            cache[str(seg.index)] = {
+                "state": jnp.zeros((n, batch, n_heads, cfg.ssm_headdim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.ssm_conv_width - 1, conv_ch),
+                                  dtype)}
+    return cache
+
+
+def _ring_fill(buf: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+    """Place the last C positions of `new` (B,S,...) into ring buffer (B,C,...)."""
+    C = buf.shape[1]
+    S = new.shape[1]
+    if S >= C:
+        tail = new[:, S - C:]
+        idx = jnp.mod(jnp.arange(S - C, S), C)
+    else:
+        tail = new
+        idx = jnp.arange(S)
+    return buf.at[:, idx].set(tail.astype(buf.dtype))
+
+
+def _layer_prefill(lp: dict, x, positions, aux, cache_entry, spec: SegmentSpec,
+                   cfg: ArchConfig):
+    """Like _layer_fwd but fills this layer's cache entry."""
+    new_cache = dict(cache_entry)
+    if spec.kind in ("attn", "local_attn", "shared_attn"):
+        h = rmsnorm(lp["ln1"], x)
+        q, k, v = _gqa(lp, h, positions, cfg)
+        ctx = attn_lib.blockwise_attention(q, k, v, causal=cfg.causal,
+                                           window=spec.window)
+        x = _radd(x, _attn_out(_unpad_ctx(ctx, cfg), lp["attn"]["wo"]))
+        k, v = _unpad_kv(k, v, cfg)
+        if spec.window:
+            new_cache = {"k": _ring_fill(cache_entry["k"], k),
+                         "v": _ring_fill(cache_entry["v"], v)}
+        else:
+            S = k.shape[1]
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache_entry["k"], k.astype(cache_entry["k"].dtype), 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache_entry["v"], v.astype(cache_entry["v"].dtype), 0, axis=1)}
+    elif spec.kind == "mla":
+        h = rmsnorm(lp["ln1"], x)
+        out, (c_kv, k_pe) = attn_lib.mla_prefill(
+            lp["attn"], h, positions, rope_theta=cfg.rope_theta,
+            nope_hd=cfg.nope_head_dim, causal=cfg.causal)
+        x = _radd(x, out)
+        new_cache = {
+            "c": jax.lax.dynamic_update_slice_in_dim(
+                cache_entry["c"], c_kv.astype(cache_entry["c"].dtype), 0, axis=1),
+            "pe": jax.lax.dynamic_update_slice_in_dim(
+                cache_entry["pe"], k_pe.astype(cache_entry["pe"].dtype), 0, axis=1)}
+    elif spec.kind == "ssm":
+        h = rmsnorm(lp["ln1"], x)
+        out, (state, conv) = ssm_lib.mamba2_prefill(
+            lp["mixer"], h, expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+            conv_width=cfg.ssm_conv_width)
+        x = _radd(x, out)
+        new_cache = {"state": state,
+                     "conv": conv.astype(cache_entry["conv"].dtype)}
+
+    ffn = "mlp" if spec.kind == "shared_attn" else spec.ffn
+    if ffn == "mlp":
+        x = _radd(x, mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x)))
+    elif ffn == "moe":
+        y, a = moe_lib.moe_apply(lp["moe"], rmsnorm(lp["ln2"], x),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.moe_capacity_factor,
+                                 aux_coef=cfg.router_aux_coef)
+        x = _radd(x, y)
+        aux = aux + a
+    return x, aux, new_cache
+
+
+def _layer_decode(lp: dict, x, pos, aux, cache_entry, spec: SegmentSpec,
+                  cfg: ArchConfig):
+    """Single-token step through one layer; updates cache entry (no layer axis)."""
+    positions = pos[None]
+    if spec.kind in ("attn", "local_attn", "shared_attn"):
+        h = rmsnorm(lp["ln1"], x)
+        # decode is single-token: no score-AR pathology, so no head padding
+        q, k, v = _gqa(lp, h, positions, cfg, pad=False)
+        kc, vc = attn_lib.cache_write(cache_entry["k"], cache_entry["v"], k, v,
+                                      pos, window=spec.window)
+        ctx = attn_lib.decode_attend(q, kc, vc, pos, window=spec.window)
+        x = _radd(x, _attn_out(ctx, lp["attn"]["wo"]))
+        new_cache = {"k": kc, "v": vc}
+    elif spec.kind == "mla":
+        h = rmsnorm(lp["ln1"], x)
+        out, (cc, pc) = attn_lib.mla_decode(lp["attn"], h, pos,
+                                            cache_entry["c"], cache_entry["pe"],
+                                            rope_theta=cfg.rope_theta,
+                                            nope_hd=cfg.nope_head_dim)
+        x = _radd(x, out)
+        new_cache = {"c": cc, "pe": pc}
+    elif spec.kind == "ssm":
+        h = rmsnorm(lp["ln1"], x)
+        out, (state, conv) = ssm_lib.mamba2_decode(
+            lp["mixer"], h, cache_entry["state"], cache_entry["conv"],
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            d_state=cfg.ssm_state, conv_width=cfg.ssm_conv_width)
+        x = _radd(x, out)
+        new_cache = {"state": state, "conv": conv}
+
+    ffn = "mlp" if spec.kind == "shared_attn" else spec.ffn
+    if ffn == "mlp":
+        x = _radd(x, mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], x)))
+    elif ffn == "moe":
+        y, a = moe_lib.moe_apply(lp["moe"], rmsnorm(lp["ln2"], x),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.moe_capacity_factor,
+                                 aux_coef=cfg.router_aux_coef)
+        x = _radd(x, y)
+        aux = aux + a
+    return x, aux, new_cache
+
+
+def prefill(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+            cache: dict, cfg: ArchConfig):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    for seg in build_segments(cfg):
+        entry = cache[str(seg.index)]
+        if seg.kind == "shared_attn":
+            x, aux, new_entry = _layer_prefill(params["shared_attn"], x,
+                                               positions, aux, entry, seg, cfg)
+            new_cache[str(seg.index)] = new_entry
+            continue
+        seg_params = params["segments"][str(seg.index)]
+
+        def scan_body(carry, inp, seg=seg):
+            xx, aa = carry
+            lp, ce = inp
+            xx, aa, ne = _layer_prefill(lp, xx, positions, aa, ce, seg, cfg)
+            return (xx, aa), ne
+
+        if cfg.remat:
+            scan_body = jax.checkpoint(scan_body)
+        (x, aux), seg_cache = jax.lax.scan(scan_body, (x, aux),
+                                           (seg_params, entry))
+        new_cache[str(seg.index)] = seg_cache
+    return x, aux, new_cache
+
+
+def decode(params: dict, x: jnp.ndarray, pos: jnp.ndarray, cache: dict,
+           cfg: ArchConfig):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    for seg in build_segments(cfg):
+        entry = cache[str(seg.index)]
+        if seg.kind == "shared_attn":
+            x, aux, new_entry = _layer_decode(params["shared_attn"], x, pos,
+                                              aux, entry, seg, cfg)
+            new_cache[str(seg.index)] = new_entry
+            continue
+        seg_params = params["segments"][str(seg.index)]
+
+        def scan_body(carry, inp, seg=seg):
+            xx, aa = carry
+            lp, ce = inp
+            xx, aa, ne = _layer_decode(lp, xx, pos, aa, ce, seg, cfg)
+            return (xx, aa), ne
+
+        (x, aux), seg_cache = jax.lax.scan(scan_body, (x, aux),
+                                           (seg_params, entry))
+        new_cache[str(seg.index)] = seg_cache
+    return x, aux, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.schedules import (constant, inv_t, paper_strongly_convex,  # noqa: F401
+                                   nonconvex_fixed, cosine)
+from repro.optim.sgd import sgd_init, sgd_step  # noqa: F401

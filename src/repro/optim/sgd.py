@@ -1,0 +1,32 @@
+"""Plain SGD (+momentum, weight decay) — the paper's optimizer, server side.
+
+The FL algorithms apply `w -= η·Ḡ` themselves; this module is the standalone
+optimizer used by non-FL training paths and the momentum variant of the server
+update (a beyond-paper option: server momentum over the MIFA mean update).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_step(params, grads, opt_state, *, eta, momentum: float = 0.0,
+             weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, w: g + weight_decay * w.astype(g.dtype),
+                             grads, params)
+    if momentum:
+        m = jax.tree.map(lambda mm, g: momentum * mm + g.astype(jnp.float32),
+                         opt_state["m"], grads)
+        params = jax.tree.map(lambda w, mm: (w - eta * mm).astype(w.dtype),
+                              params, m)
+        return params, {"m": m}
+    params = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype),
+                          params, grads)
+    return params, opt_state

@@ -1,0 +1,418 @@
+"""Loop-aware HLO analysis -> three-term roofline (EXPERIMENTS.md §Roofline).
+
+`compiled.cost_analysis()` counts each `while` body ONCE, so an 80-layer
+`lax.scan` model would report 1-layer costs. This analyzer parses the
+optimized HLO text (`compiled.as_text()`), reconstructs the computation call
+graph, extracts each while loop's trip count from its condition computation,
+and multiplies body costs through — giving loop-exact:
+
+  * matmul FLOPs (from `dot` ops: 2 * prod(result dims) * prod(contracting)),
+  * HBM traffic estimate (sum of result + operand bytes over materialized ops
+    — each buffer written once and read by its consumers),
+  * collective bytes by type, using *operand* sizes per the brief
+    (all-gather operand = result/groups; reduce-scatter operand = result*groups).
+
+Everything is per-device (the HLO is the SPMD per-chip program).
+
+Hardware constants (TPU v5e, from the brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # B/s per chip
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = <type> opcode(...)` where <type> is `f32[8,32]{1,0}` or a tuple
+# `(s32[], bf16[8,32]{1,0}, ...)`; layouts `{...}` optional.
+_TYPE = r"(?:\([^)]*\)|[a-z0-9_]+\[[\d,]*\](?:\{[^}]*\})?)"
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(" + _TYPE + r")\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str   # text after '(' — operands + attributes
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    # resolved lazily:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            cur.ops.append(Op(mo.group(1), mo.group(2).strip(), mo.group(3),
+                              mo.group(4)))
+    comps["__entry__"] = comps.get(entry_name, Computation("__missing__"))
+    return comps
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    # iota form: replica_groups=[8,32]<=[256]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are before the first '),' attribute boundary; conservative:
+    depth, out, cur = 0, [], ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur)
+    names = []
+    for frag in out:
+        m = re.search(r"%([\w\.\-]+)", frag)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+# Materialization points whose result+operand bytes count as HBM traffic.
+# Top-level elementwise ops (add/select/convert/...) are nearly always inside
+# fusions after optimization; counting stray ones would double-charge chains.
+_HEAVY = {"fusion", "dot", "copy", "custom-call", "convolution",
+          "reduce", "scatter", "gather", "sort",
+          "dynamic-update-slice", "dynamic-slice", "concatenate",
+          "pad", "slice"}
+_HEAVY |= set(COLLECTIVES)
+
+
+
+
+_CONV_ONLY = {"parameter", "convert", "bitcast", "copy", "reshape",
+              "transpose", "broadcast", "constant"}
+
+
+def _fusion_bytes(op: Op, res_bytes: int, type_of, comps) -> tuple:
+    """Traffic of a fusion op, looking *inside* the fused computation.
+
+    Two CPU-HLO patterns would otherwise overcount by ~n_layers x:
+      * an operand that the fused computation dynamic-slices (layer scans
+        slicing their stacked params) — charge the slice, not the stack;
+      * a fused root dynamic-update-slice (cache token writes) — charge the
+        updated region, not the whole (aliased) buffer.
+    """
+    sub_m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+    subc = comps.get(sub_m.group(1)) if sub_m else None
+    onames = _operand_names(op.rest)
+
+    # pure dtype-conversion fusions are a CPU-backend artifact (XLA:CPU
+    # upcasts bf16 dot operands to f32); native-bf16 TPUs never materialize
+    # them — classify separately so the roofline memory term can exclude them
+    is_conversion = bool(subc and subc.ops and
+                         all(o.opcode in _CONV_ONLY for o in subc.ops))
+
+    sliced_params: dict[str, int] = {}   # param name -> slice result bytes
+    param_names: dict[int, str] = {}
+    root_dus_update: int | None = None
+    if subc is not None and subc.ops:
+        for o in subc.ops:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)\)", o.rest)
+                if m:
+                    param_names[int(m.group(1))] = o.name
+        sub_tab = {o.name: o.type_str for o in subc.ops}
+        for o in subc.ops:
+            if o.opcode == "dynamic-slice":
+                srcs = _operand_names(o.rest)
+                if srcs:
+                    sliced_params[srcs[0]] = _shape_bytes(o.type_str)
+        root = subc.ops[-1]
+        if root.opcode == "dynamic-update-slice":
+            upd = _operand_names(root.rest)
+            if len(upd) > 1 and upd[1] in sub_tab:
+                root_dus_update = _shape_bytes(sub_tab[upd[1]])
+
+    total = (2 * root_dus_update) if root_dus_update is not None else res_bytes
+    for i, nm in enumerate(onames[:6]):
+        t = type_of(nm)
+        if not t:
+            continue
+        ob = _shape_bytes(t)
+        pname = param_names.get(i)
+        if pname is not None and pname in sliced_params:
+            ob = 2 * sliced_params[pname]
+        elif root_dus_update is not None and i == 0 and ob >= res_bytes:
+            ob = 0  # the aliased base buffer of an in-place cache update
+        else:
+            ob = min(ob, 16 * max(res_bytes, 1))
+        total += ob
+    return float(total), is_conversion
+
+
+def _analyze_computation(comp: Computation, symtab: dict[str, str],
+                         comps: dict[str, Computation],
+                         memo: dict[str, tuple]) -> tuple:
+    """Returns (flops, bytes, conv_bytes, coll_by_type) with loops expanded.
+
+    conv_bytes = traffic of pure dtype-conversion fusions (CPU-only artifact).
+    """
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = (0.0, 0.0, 0.0, {})  # cycle guard
+    flops = 0.0
+    nbytes = 0.0
+    conv_bytes = 0.0
+    coll: dict[str, float] = {}
+
+    local_tab = {op.name: op.type_str for op in comp.ops}
+
+    def type_of(name: str) -> str | None:
+        return local_tab.get(name) or symtab.get(name)
+
+    for op in comp.ops:
+        res_bytes = _shape_bytes(op.type_str)
+        if op.opcode == "while":
+            body_m = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            cond_m = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            trip_m = _TRIP_RE.search(op.rest)
+            trip = 1
+            if trip_m:
+                trip = int(trip_m.group(1))
+            elif cond_m and cond_m.group(1) in comps:
+                consts = [int(c) for c in re.findall(
+                    r"constant\((\d+)\)",
+                    "\n".join(f"{o.opcode}({o.rest}" for o in
+                              comps[cond_m.group(1)].ops))]
+                if consts:
+                    trip = max(consts)
+            if body_m and body_m.group(1) in comps:
+                bf, bb, bcv, bc = _analyze_computation(
+                    comps[body_m.group(1)], symtab, comps, memo)
+                flops += trip * bf
+                nbytes += trip * bb
+                conv_bytes += trip * bcv
+                for k, v in bc.items():
+                    coll[k] = coll.get(k, 0.0) + trip * v
+            continue
+        if op.opcode in ("call", "conditional"):
+            for sub in re.findall(r"to_apply=%?([\w\.\-]+)", op.rest) + \
+                    re.findall(r"branch_computations=\{%?([\w\.\-]+)", op.rest):
+                if sub in comps:
+                    sf, sb, scv, sc = _analyze_computation(comps[sub], symtab,
+                                                           comps, memo)
+                    flops += sf
+                    nbytes += sb
+                    conv_bytes += scv
+                    for k, v in sc.items():
+                        coll[k] = coll.get(k, 0.0) + v
+            continue
+
+        if op.opcode == "dot":
+            dims = _shape_dims(op.type_str)
+            ops_names = _operand_names(op.rest)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            if dims and ops_names and cdims is not None:
+                lhs_t = type_of(ops_names[0])
+                lhs = _shape_dims(lhs_t) if lhs_t else None
+                k = 1
+                if lhs:
+                    for ci in cdims.group(1).split(","):
+                        if ci:
+                            k *= lhs[0][int(ci)]
+                flops += 2.0 * float(np.prod(dims[0], dtype=np.float64)) * k
+        elif op.opcode == "fusion":
+            # count any dots hidden inside the fused computation
+            sub = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            if sub and sub.group(1) in comps:
+                sf = _analyze_computation(comps[sub.group(1)], symtab,
+                                          comps, memo)[0]
+                flops += sf
+
+        if op.opcode in COLLECTIVES or op.opcode.rstrip("-start") in COLLECTIVES:
+            base = op.opcode.replace("-start", "")
+            g = _group_size(op.rest)
+            if base == "all-gather":
+                operand_bytes = res_bytes / max(g, 1)
+            elif base == "reduce-scatter":
+                operand_bytes = res_bytes * max(g, 1)
+            else:
+                operand_bytes = res_bytes
+            coll[base] = coll.get(base, 0.0) + operand_bytes
+
+        if op.opcode in _HEAVY:
+            if op.opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region, not the whole operand (layer
+                # scans slice their stacked params every iteration — charging
+                # the full stack would overcount ~n_layers x)
+                nbytes += 2 * res_bytes
+            elif op.opcode == "dynamic-update-slice":
+                # reads + writes the updated region (operand 1); base aliased
+                onames = _operand_names(op.rest)
+                upd = type_of(onames[1]) if len(onames) > 1 else None
+                nbytes += 2 * (_shape_bytes(upd) if upd else res_bytes)
+            elif op.opcode == "fusion":
+                fb, is_conv = _fusion_bytes(op, res_bytes, type_of, comps)
+                if is_conv:
+                    conv_bytes += fb
+                else:
+                    nbytes += fb
+            else:
+                onames = _operand_names(op.rest)
+                op_bytes = 0
+                for nm in onames[:4]:
+                    t = type_of(nm)
+                    if t:
+                        op_bytes += _shape_bytes(t)
+                nbytes += res_bytes + op_bytes
+
+    memo[comp.name] = (flops, nbytes, conv_bytes, coll)
+    return memo[comp.name]
+
+
+def analyze_compiled(compiled) -> dict:
+    """Full analysis of a jax compiled object."""
+    text = compiled.as_text()
+    comps = parse_hlo(text)
+    symtab: dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            symtab[op.name] = op.type_str
+    memo: dict[str, tuple] = {}
+    # exclude fused computations from direct traversal (reached via their op)
+    flops, nbytes, conv_bytes, coll = _analyze_computation(
+        comps["__entry__"], symtab, comps, memo)
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    out = {
+        "hlo_flops_parsed": flops,
+        "hlo_bytes_parsed": nbytes,
+        "conversion_bytes_cpu_artifact": conv_bytes,
+        "collective_bytes": coll,
+        "collective_bytes_total": float(sum(coll.values())),
+        "cost_analysis_flops": float(ca.get("flops", 0.0)),
+        "cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        },
+    }
+    return out
+
+
+def roofline_terms(analysis: dict, hw: dict = HW) -> dict:
+    """Seconds per step for each roofline term (per chip — HLO is per-chip)."""
+    # parsed values are loop-exact; cost_analysis counts while bodies once.
+    # Fall back to cost_analysis only if parsing found (nearly) nothing.
+    flops = analysis["hlo_flops_parsed"]
+    if flops < 0.01 * analysis["cost_analysis_flops"]:
+        flops = analysis["cost_analysis_flops"]
+    nbytes = analysis["hlo_bytes_parsed"]
+    if nbytes < 0.01 * analysis["cost_analysis_bytes"]:
+        nbytes = analysis["cost_analysis_bytes"]
+    cbytes = analysis["collective_bytes_total"]
+    t_compute = flops / hw["peak_flops"]
+    t_memory = nbytes / hw["hbm_bw"]
+    t_coll = cbytes / hw["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    return {**terms, "bottleneck": dom.replace("_s", ""),
+            "step_time_lower_bound_s": max(terms.values())}
+
+
+def model_flops(cfg, params_total: int, params_active: int, shape,
+                kind: str) -> float:
+    """Useful model FLOPs (6·N·D train / 2·N·D inference), MoE-active-aware."""
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * params_active * tokens
+    if kind in ("prefill", "encode"):
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * params_active * shape.global_batch

@@ -1,0 +1,83 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Profiling helper for the §Perf loop: lowers one (arch x shape), prints the
+# top computations by bytes/flops (loop-expanded), the largest buffer shapes,
+# and the collective mix — the "profile" the hypothesis loop reads.
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import plan
+from repro.roofline import analysis as A
+
+_DT = {"bf16": 2, "f32": 4, "s32": 4, "pred": 1, "u32": 4, "s8": 1, "f16": 2}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--memory-dtype", default=None)
+    ap.add_argument("--sequential-clients", default=None,
+                    choices=["true", "false"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.memory_dtype:
+        overrides["memory_dtype"] = args.memory_dtype
+    if args.sequential_clients:
+        overrides["sequential_clients"] = args.sequential_clients == "true"
+    if args.capacity_factor:
+        overrides["moe_capacity_factor"] = args.capacity_factor
+
+    mesh = make_production_mesh()
+    p = plan(args.arch, args.shape, mesh, **overrides)
+    jitted = jax.jit(p.fn, in_shardings=p.in_shardings,
+                     out_shardings=p.out_shardings,
+                     donate_argnums=p.donate_argnums)
+    compiled = jitted.lower(*p.args).compile()
+    text = compiled.as_text()
+    comps = A.parse_hlo(text)
+    symtab = {op.name: op.type_str for c in comps.values() for op in c.ops}
+    memo: dict = {}
+    f, b, cv, coll = A._analyze_computation(comps["__entry__"], symtab,
+                                            comps, memo)
+    ma = compiled.memory_analysis()
+    print(f"== {args.arch} x {args.shape} {overrides or ''}")
+    print(f"flops/chip={f / 1e12:.2f}TF bytes/chip={b / 1e12:.3f}TB "
+          f"conv_bytes(cpu-only)={cv / 1e12:.3f}TB "
+          f"coll/chip={sum(coll.values()) / 1e9:.2f}GB "
+          f"temp={ma.temp_size_in_bytes / 1e9:.1f}GB "
+          f"args={ma.argument_size_in_bytes / 1e9:.1f}GB")
+    print("collectives:", {k: f"{v / 1e9:.2f}GB" for k, v in coll.items()})
+
+    print("\n-- top computations (bytes per single execution) --")
+    rows = sorted(((v[1], v[0], k) for k, v in memo.items()), reverse=True)
+    for by, fl, name in rows[:args.top]:
+        print(f"{by / 1e9:10.2f} GB {fl / 1e9:12.1f} GF  {name[:70]}")
+
+    print("\n-- largest buffer shapes --")
+    sizes: collections.Counter = collections.Counter()
+    for m in re.finditer(r"= (\w+)\[([\d,]+)\]", text):
+        dt, dims = m.group(1), m.group(2)
+        bb = _DT.get(dt)
+        if not bb:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        key = f"{dt}[{dims}]"
+        sizes[key] = max(sizes[key], n * bb)
+    for shape, bb in sorted(sizes.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"{bb / 1e9:10.2f} GB  x{text.count(shape):5d}  {shape}")
+
+
+if __name__ == "__main__":
+    main()

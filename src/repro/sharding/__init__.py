@@ -1,0 +1,2 @@
+from repro.sharding.rules import (param_specs, client_state_specs,  # noqa: F401
+                                  cache_specs, batch_specs, DATA, MODEL)

@@ -1,0 +1,266 @@
+"""Partition rules: parameter / client-state / cache / batch PartitionSpecs.
+
+Axis conventions (launch/mesh.py):
+    single pod : ("data", "model")              16 x 16
+    multi-pod  : ("pod", "data", "model")       2 x 16 x 16
+
+* `model` carries tensor parallelism: attention heads, d_ff, experts, d_inner.
+* `data` carries client parallelism (MIFA's client axis) and, for `fsdp`
+  configs, a second parameter shard dim (2-D FSDP x TP).
+* `pod` extends the client/data axis across pods (pure data parallel across
+  DCN; parameters replicated across pods so per-layer all-gathers stay on ICI).
+
+Rules are matched on the *trailing* dims of each leaf by parameter name, so
+layer-stacked leaves (leading segment axis) reuse the same table.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+
+DATA = "data"
+MODEL = "model"
+
+
+def data_axes(mesh) -> tuple:
+    """Client/data axes — ('pod','data') on the multi-pod mesh."""
+    return ("pod", DATA) if "pod" in mesh.axis_names else (DATA,)
+
+
+# --------------------------------------------------------------------------- #
+# trailing-dim rule table: name -> spec for the *trailing* dims
+# --------------------------------------------------------------------------- #
+
+def _trailing_spec(name: str, parent: str, ndim_trailing: int,
+                   fsdp: bool) -> tuple:
+    f = DATA if fsdp else None
+    table: dict[str, tuple] = {
+        # embeddings / head: d_model on `model` => local gather at lookup;
+        # lm_head vocab on `model` => vocab-sharded logits (psum'd logsumexp)
+        "embed": (f, MODEL),
+        "lm_head": (f, MODEL),
+        "frontend_proj": (None, MODEL),
+        # attention (GQA), FLAT layout: (d, H*hd) / (H*hd, d) / biases (H*hd,)
+        "wq": (f, MODEL),
+        "wk": (f, MODEL),
+        "wv": (f, MODEL),
+        "wo": (MODEL, f),
+        "bq": (MODEL,),
+        "bk": (MODEL,),
+        "bv": (MODEL,),
+        # MLA (flat)
+        "w_dkv": (f, None),
+        "w_kpe": (f, None),
+        "w_uk": (None, MODEL),
+        "w_uv": (None, MODEL),
+        # ssm (mamba2)
+        "in_proj": (f, MODEL),
+        "out_proj": (MODEL, f),
+        "conv_w": (None, MODEL),
+        "conv_b": (MODEL,),
+        "A_log": (MODEL,),
+        "D": (MODEL,),
+        "dt_bias": (MODEL,),
+        "norm_scale": (MODEL,),
+        # router
+        "router": (None, None),
+        # norms
+        "scale": (None,),
+        # tabular models
+        "w": (None, None) if ndim_trailing == 2 else (None,),
+        "b": (None,),
+    }
+    if name in ("w1", "w3"):
+        if ndim_trailing == 3:            # moe experts (E, d, f)
+            return (MODEL, None, None)
+        return (f, MODEL)                 # dense mlp (d, f)
+    if name == "w2":
+        if ndim_trailing == 3:            # (E, f, d)
+            return (MODEL, None, None)
+        return (MODEL, f)                 # (f, d)
+    if name in table:
+        spec = table[name]
+        if len(spec) == ndim_trailing:
+            return spec
+        # tolerate rank differences (e.g. tabular "w" 2d vs bias 1d)
+        if len(spec) > ndim_trailing:
+            return spec[-ndim_trailing:]
+        return (None,) * (ndim_trailing - len(spec)) + spec
+    return (None,) * ndim_trailing
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize(spec: tuple, shape: tuple, mesh) -> tuple:
+    """Drop sharding on dims the mesh axis size does not divide.
+
+    Production note: frameworks usually *pad* indivisible dims (e.g. granite's
+    vocab 49155 -> 49168) instead; we keep exact assigned shapes and replicate
+    those dims, recording the memory cost in §Roofline.
+    """
+    out = []
+    for dim, entry in zip(shape, spec):
+        n = _axis_size(mesh, entry)
+        out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
+    return tuple(out)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for part in path:
+        if hasattr(part, "key"):
+            names.append(str(part.key))
+        elif hasattr(part, "idx"):
+            names.append(str(part.idx))
+    return names
+
+
+def _base_ndim(name: str, parent: str) -> int:
+    """Rank of the *unstacked* parameter (trailing dims the table describes)."""
+    ranks = {
+        "embed": 2, "lm_head": 2, "frontend_proj": 2,
+        "wq": 2, "wk": 2, "wv": 2, "wo": 2, "bq": 1, "bk": 1, "bv": 1,
+        "w_dkv": 2, "w_kpe": 2, "w_uk": 2, "w_uv": 2,
+        "in_proj": 2, "out_proj": 2, "conv_w": 2, "conv_b": 1,
+        "A_log": 1, "D": 1, "dt_bias": 1, "norm_scale": 1,
+        "router": 2, "scale": 1,
+    }
+    if name in ("w1", "w2", "w3"):
+        return 3 if parent == "moe" else 2
+    if name == "w":
+        return 2
+    if name == "b":
+        return 1
+    return ranks.get(name, 0)
+
+
+def _spec_for(path, leaf, fsdp: bool, extra_leading: int = 0) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    base = _base_ndim(name, parent)
+    nd = leaf.ndim - extra_leading
+    trailing = min(base, nd) if base else nd
+    spec = _trailing_spec(name, parent, trailing, fsdp)
+    lead = (None,) * (leaf.ndim - len(spec) - extra_leading)
+    return spec, lead
+
+
+def param_specs(params: Any, cfg: ArchConfig, mesh) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    def fn(path, leaf):
+        spec, lead = _spec_for(path, leaf, cfg.fsdp)
+        full = lead + tuple(spec)
+        return P(*sanitize(full, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def client_state_specs(params: Any, cfg: ArchConfig, mesh,
+                       sequential_clients: bool = False,
+                       n_clients: int = 0) -> Any:
+    """Specs for MIFA's update array: leaves (N_clients, *param_shape).
+
+    vmap mode: client axis -> data (and pod); param dims use model-only rules
+    (the data axis is taken by clients, so fsdp is dropped).
+    sequential (scan) mode: clients unsharded; param dims keep full 2-D
+    (data x model) sharding — per-client grads are computed on the whole mesh.
+    """
+    dax = data_axes(mesh)
+
+    def fn(path, leaf):
+        if sequential_clients:
+            # G always keeps full 2-D (data x model) sharding in sequential
+            # mode — independent of whether the *params* use fsdp — since
+            # per-client updates are computed on the whole mesh.
+            spec, lead = _spec_for(path, leaf, True, extra_leading=1)
+            full = (None,) + lead + tuple(spec)
+        else:
+            spec, lead = _spec_for(path, leaf, False, extra_leading=1)
+            full = (dax,) + lead + tuple(spec)
+        # G leaves are (N_clients, *param_shape); sanitize with that shape
+        return P(*sanitize(full, (n_clients,) + tuple(leaf.shape), mesh))
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def cache_specs(cache: Any, cfg: ArchConfig, mesh, batch_size: int) -> Any:
+    """KV/SSM cache specs.
+
+    Stacked entries: (n_layers, B, C, KV, hd) etc. Batch shards over data when
+    divisible; for the single-request long-context shape (B=1) the *sequence*
+    dim of attention caches shards over data instead (flash-decode style).
+    """
+    dax = data_axes(mesh)
+    n_dev_data = 1
+    for a in dax:
+        n_dev_data *= mesh.shape[a]
+    batch_sharded = batch_size % n_dev_data == 0 and batch_size >= n_dev_data
+    bspec = dax if batch_sharded else None
+    sspec = None if batch_sharded else dax
+
+    model_size = mesh.shape[MODEL]
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        stacked = leaf.ndim == {"k": 5, "v": 5, "c": 4, "pe": 4,
+                                "state": 5, "conv": 4}.get(name, -1)
+        lead = (None,) if stacked else ()
+        if name in ("k", "v"):      # (B, C, KV, hd)
+            kv = leaf.shape[-2]
+            if kv % model_size == 0:
+                full = lead + (bspec, sspec, MODEL, None)
+            elif batch_sharded:
+                # too few kv heads for the model axis: seq-shard the cache
+                # over `model` instead (flash-decode style partial softmax)
+                full = lead + (bspec, MODEL, None, None)
+            else:
+                dd = tuple(dax) + (MODEL,)
+                full = lead + (bspec, dd, None, None)
+            return P(*sanitize(full, leaf.shape, mesh))
+        if name in ("c", "pe"):     # (B, S, r) — MLA compressed cache
+            full = lead + (bspec, sspec if sspec else MODEL, None)
+            return P(*sanitize(full, leaf.shape, mesh))
+        if name == "state":         # (B, H, P, N)
+            full = lead + (bspec, MODEL, None, None)
+            return P(*sanitize(full, leaf.shape, mesh))
+        if name == "conv":          # (B, W-1, conv_ch)
+            full = lead + (bspec, None, MODEL)
+            return P(*sanitize(full, leaf.shape, mesh))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def batch_specs(batch: Any, mesh, *, client_axis: bool = True,
+                sequential_clients: bool = False) -> Any:
+    """Training batches (N, K, mb, ...) or serving batches (B, ...).
+
+    vmap mode shards the leading client axis over data; sequential mode shards
+    the per-client minibatch dim (axis 2) instead.
+    """
+    dax = data_axes(mesh)
+
+    def fn(leaf):
+        if client_axis and sequential_clients:
+            # shard the per-client minibatch dim over `data` only (pods hold
+            # the fsdp replica axis in sequential mode)
+            spec = [None, None, DATA] + [None] * (leaf.ndim - 3)
+        else:
+            spec = [dax] + [None] * (leaf.ndim - 1)
+        return P(*sanitize(tuple(spec), leaf.shape, mesh))
+
+    return jax.tree.map(fn, batch)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `src/` importable regardless of how pytest is invoked.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests and benches must see exactly ONE device (the dry-run sets its own
+# XLA_FLAGS in a subprocess); keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

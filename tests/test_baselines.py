@@ -1,0 +1,105 @@
+"""FedAvg-variant baselines (paper Algorithm 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BiasedFedAvg, FedAvgIS, FedAvgSampling, SCAFFOLDSampling
+
+N = 5
+
+
+def test_biased_averages_active_only():
+    params = {"w": jnp.zeros((2,))}
+    algo = BiasedFedAvg()
+    state = algo.init_state(params, 3)
+    u = {"w": jnp.array([[3.0, 3.0], [1.0, 1.0], [100.0, 100.0]])}
+    active = jnp.array([True, True, False])
+    _, params, _ = algo.round_step(state, params, u, jnp.zeros(3), active,
+                                   jnp.float32(1.0))
+    np.testing.assert_allclose(params["w"], [-2.0, -2.0])  # mean of active
+
+
+def test_is_weights_by_inverse_probability():
+    params = {"w": jnp.zeros((1,))}
+    probs = (0.5, 0.25)
+    algo = FedAvgIS(probs)
+    state = algo.init_state(params, 2)
+    u = {"w": jnp.array([[1.0], [1.0]])}
+    _, p_act, _ = algo.round_step(state, params, u, jnp.zeros(2),
+                                  jnp.array([True, True]), jnp.float32(1.0))
+    # update = mean_i(u_i/p_i) = (1/0.5 + 1/0.25)/2 = 3
+    np.testing.assert_allclose(p_act["w"], [-3.0])
+
+
+def test_is_unbiased_over_rounds():
+    """E[IS update] equals the all-active mean update."""
+    rng = np.random.default_rng(0)
+    probs = np.array([0.2, 0.5, 0.9])
+    algo = FedAvgIS(tuple(probs))
+    params = {"w": jnp.zeros((1,))}
+    u = {"w": jnp.array([[1.0], [2.0], [3.0]])}
+    total = np.zeros(1)
+    T = 4000
+    for t in range(T):
+        active = jnp.asarray(rng.random(3) < probs)
+        state = algo.init_state(params, 3)
+        _, p_new, _ = algo.round_step(state, params, u, jnp.zeros(3), active,
+                                      jnp.float32(1.0))
+        total += -np.asarray(p_new["w"])
+    np.testing.assert_allclose(total / T, [2.0], atol=0.1)  # mean(1,2,3)
+
+
+def test_sampling_waits_for_cohort():
+    """Params must stay frozen until every selected device has responded."""
+    params = {"w": jnp.zeros((1,))}
+    algo = FedAvgSampling(s=2)
+    state = algo.init_state(params, 4)
+    rng = jax.random.PRNGKey(0)
+    u = {"w": jnp.ones((4, 1))}
+    # nobody active: no update possible
+    state, p1, m = algo.round_step(state, params, u, jnp.zeros(4),
+                                   jnp.zeros(4, bool), jnp.float32(1.0), rng)
+    np.testing.assert_allclose(p1["w"], params["w"])
+    assert int(state["t_updates"]) == 0
+    sel = np.asarray(state["selected"])
+    assert sel.sum() == 2
+    # only selected devices active: cohort completes, update applied
+    state, p2, m = algo.round_step(state, p1, u, jnp.zeros(4),
+                                   jnp.asarray(sel), jnp.float32(1.0), rng)
+    assert int(state["t_updates"]) == 1
+    np.testing.assert_allclose(p2["w"], [-1.0])
+    assert bool(state["need_resample"])
+
+
+def test_sampling_counts_updates_under_stragglers():
+    """With a straggler in the pool, global updates accrue slowly (Eq. 3)."""
+    rng_np = np.random.default_rng(0)
+    probs = np.array([0.05] + [0.9] * 7)
+    params = {"w": jnp.zeros((1,))}
+    algo = FedAvgSampling(s=4)
+    state = algo.init_state(params, 8)
+    key = jax.random.PRNGKey(1)
+    u = {"w": jnp.ones((8, 1))}
+    T = 200
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        active = jnp.asarray(rng_np.random(8) < probs) if t else jnp.ones(8, bool)
+        state, params, _ = algo.round_step(state, params, u, jnp.zeros(8),
+                                           active, jnp.float32(0.1), sub)
+    # far fewer global updates than rounds
+    assert int(state["t_updates"]) < T // 2
+
+
+def test_scaffold_runs_and_updates():
+    params = {"w": jnp.zeros((2,))}
+    algo = SCAFFOLDSampling(s=2, k_steps=1)
+    state = algo.init_state(params, 4)
+    key = jax.random.PRNGKey(0)
+    u = {"w": jnp.ones((4, 2))}
+    for t in range(6):
+        key, sub = jax.random.split(key)
+        state, params, _ = algo.round_step(state, params, u, jnp.zeros(4),
+                                           jnp.ones(4, bool), jnp.float32(0.1),
+                                           sub)
+    assert int(state["t_updates"]) == 6
+    assert np.all(np.isfinite(np.asarray(params["w"])))

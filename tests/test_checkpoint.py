@@ -1,0 +1,50 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "nested": {"b": jnp.ones(4), "c": [jnp.zeros(2), jnp.ones(1)]}}
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree)
+    back = load_pytree(p)
+    assert isinstance(back["nested"]["c"], list)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_model_params(tmp_path):
+    """Numeric-string dict keys (segment indices) must stay dicts."""
+    cfg = get_smoke_config("granite_3_8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p = str(tmp_path / "model.npz")
+    save_pytree(p, params)
+    back = load_pytree(p)
+    assert isinstance(back["segments"], dict)
+    assert set(back["segments"].keys()) == set(params["segments"].keys())
+    lo, lb = jax.tree.leaves(params), jax.tree.leaves(back)
+    assert len(lo) == len(lb)
+    for a, b in zip(lo, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restored params run
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    l1, _ = model.loss_fn(params, batch)
+    l2, _ = model.loss_fn(back, batch)
+    assert float(l1) == float(l2)
+
+
+def test_roundtrip_mifa_state(tmp_path):
+    from repro.core import MIFA
+    params = {"w": jnp.ones((3, 2))}
+    st = MIFA(memory="int8").init_state(params, 4)
+    p = str(tmp_path / "state.npz")
+    save_pytree(p, st)
+    back = load_pytree(p)
+    assert back["G_q"]["w"].dtype == jnp.int8
+    assert back["G_q"]["w"].shape == (4, 3, 2)

@@ -1,0 +1,46 @@
+"""End-to-end dry-run: lower+compile one (arch x shape) on the production mesh
+in a subprocess (XLA_FLAGS isolation), verifying the JSON artifact schema."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("arch,shape", [("mamba2_1_3b", "decode_32k")])
+def test_dryrun_single_combo(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "pod", "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__pod.json"))
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == 256
+    r = rec["roofline"]
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert r["step_time_lower_bound_s"] > 0
+    m = rec["analysis"]["memory"]
+    assert m["peak_estimate_bytes"] > 0
+    assert rec["params_total"] > 1e9  # mamba2-1.3b
+
+
+def test_skip_reasons_documented(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "hubert_xlarge", "--shape", "decode_32k", "--mesh", "pod",
+         "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0
+    rec = json.load(open(tmp_path / "hubert_xlarge__decode_32k__pod.json"))
+    assert rec["status"] == "skip"
+    assert "encoder-only" in rec["reason"]

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mifa_aggregate import mifa_aggregate
+from repro.kernels.ops import mifa_aggregate_tree
+from repro.kernels.ref import (flash_attention_ref, mifa_aggregate_ref,
+                               ssd_scan_ref)
+from repro.kernels.ssd_scan import ssd_scan
+
+
+# --------------------------------------------------------------------------- #
+# mifa_aggregate
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n,m", [(4, 256), (16, 1024), (7, 512), (100, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mifa_aggregate_sweep(n, m, dtype):
+    rng = jax.random.PRNGKey(n * m)
+    g = (jax.random.normal(rng, (n, m))).astype(dtype)
+    u = jax.random.normal(jax.random.fold_in(rng, 1), (n, m))
+    active = jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.5, (n,))
+    w = (jax.random.normal(jax.random.fold_in(rng, 3), (m,))).astype(dtype)
+    eta = 0.07
+    gn, wn = mifa_aggregate(g, u, active, w, eta, block_m=128)
+    gr, wr = mifa_aggregate_ref(g, u, active, w, eta)
+    np.testing.assert_allclose(np.asarray(gn, np.float32),
+                               np.asarray(gr, np.float32), rtol=1e-6)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(wn, np.float32),
+                               np.asarray(wr, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mifa_aggregate_all_inactive_keeps_memory():
+    g = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    u = jnp.full((3, 4), 99.0)
+    w = jnp.zeros(4)
+    gn, wn = mifa_aggregate(g, u, jnp.zeros(3, bool), w, 1.0, block_m=4)
+    np.testing.assert_array_equal(np.asarray(gn), np.asarray(g))
+    np.testing.assert_allclose(np.asarray(wn), -np.asarray(g).mean(0))
+
+
+def test_mifa_aggregate_tree_matches_per_leaf():
+    rng = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(rng, (17, 9)),
+              "b": {"c": jax.random.normal(jax.random.fold_in(rng, 1), (33,))}}
+    n = 6
+    g = jax.tree.map(lambda p: jnp.zeros((n,) + p.shape), params)
+    u = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(rng, 2),
+                                    (n,) + p.shape), params)
+    active = jnp.array([1, 0, 1, 1, 0, 1], bool)
+    g2, p2 = mifa_aggregate_tree(g, u, active, params, 0.1, block_m=64)
+    for path in (("a",), ("b", "c")):
+        gg = g[path[0]] if len(path) == 1 else g["b"]["c"]
+        uu = u[path[0]] if len(path) == 1 else u["b"]["c"]
+        pp = params[path[0]] if len(path) == 1 else params["b"]["c"]
+        gn = g2[path[0]] if len(path) == 1 else g2["b"]["c"]
+        pn = p2[path[0]] if len(path) == 1 else p2["b"]["c"]
+        gr, wr = mifa_aggregate_ref(gg.reshape(n, -1), uu.reshape(n, -1),
+                                    active, pp.reshape(-1), 0.1)
+        np.testing.assert_allclose(np.asarray(gn).reshape(n, -1),
+                                   np.asarray(gr), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(pn).reshape(-1),
+                                   np.asarray(wr), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("s,h,kv,hd", [(128, 4, 4, 32), (256, 4, 2, 64),
+                                       (128, 8, 1, 16)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kv, hd, causal, dtype):
+    rng = jax.random.PRNGKey(s + h)
+    B = 2
+    q = jax.random.normal(rng, (B, s, h, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, s, kv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, s, kv, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_matches_model_blockwise_path():
+    """Kernel == the model zoo's jnp blockwise attention (same contraction)."""
+    from repro.models.attention import blockwise_attention
+    rng = jax.random.PRNGKey(3)
+    q = jax.random.normal(rng, (1, 128, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 128, 2, 32))
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    b = blockwise_attention(q, k, v, causal=True, q_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# ssd scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [(64, 2, 8, 16, 16),
+                                           (128, 3, 16, 32, 32),
+                                           (96, 1, 32, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(s, h, p, n, chunk, dtype):
+    rng = jax.random.PRNGKey(s * h)
+    b = 2
+    x = jax.random.normal(rng, (b, s, h, p)).astype(dtype)
+    dA = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 1),
+                                            (b, s, h)))
+    B = (jax.random.normal(jax.random.fold_in(rng, 2), (b, s, n)) * 0.5)
+    C = (jax.random.normal(jax.random.fold_in(rng, 3), (b, s, n)) * 0.5)
+    y, hf = ssd_scan(x, dA, B, C, chunk=chunk)
+    yr, hr = ssd_scan_ref(x.astype(jnp.float32), dA, B, C)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=tol)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    from repro.models.ssm import ssd_chunked
+    rng = jax.random.PRNGKey(9)
+    b, s, h, p, n = 1, 64, 2, 8, 16
+    x = jax.random.normal(rng, (b, s, h, p))
+    dA = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 1),
+                                            (b, s, h)))
+    B = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, n)) * 0.5
+    y1, h1 = ssd_scan(x, dA, B, C, chunk=16)
+    y2, h2 = ssd_chunked(x, dA, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)

@@ -1,0 +1,131 @@
+"""MIFA algorithm semantics (paper Algorithm 1 + §4 delta variant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MIFA, BiasedFedAvg
+
+N = 6
+
+
+def _tree(rng, scale=1.0):
+    k1, k2 = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (4, 3)) * scale,
+            "b": jax.random.normal(k2, (3,)) * scale}
+
+
+def _updates(rng, n=N, scale=1.0):
+    k1, k2 = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (n, 4, 3)) * scale,
+            "b": jax.random.normal(k2, (n, 3)) * scale}
+
+
+def test_mifa_equals_fedavg_when_all_active():
+    """Remark 5.1: with full participation MIFA reduces to FedAvg exactly."""
+    rng = jax.random.PRNGKey(0)
+    params = _tree(rng)
+    algo_m, algo_f = MIFA(memory="array"), BiasedFedAvg()
+    sm = algo_m.init_state(params, N)
+    sf = algo_f.init_state(params, N)
+    pm, pf = params, params
+    for t in range(4):
+        u = _updates(jax.random.PRNGKey(t + 1))
+        losses = jnp.zeros(N)
+        active = jnp.ones(N, bool)
+        sm, pm, _ = algo_m.round_step(sm, pm, u, losses, active, jnp.float32(0.1))
+        sf, pf, _ = algo_f.round_step(sf, pf, u, losses, active, jnp.float32(0.1))
+    for a, b in zip(jax.tree.leaves(pm), jax.tree.leaves(pf)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_mifa_reuses_stale_updates():
+    """An inactive device's memorized update keeps contributing."""
+    params = {"w": jnp.zeros((2,))}
+    algo = MIFA(memory="array")
+    state = algo.init_state(params, 2)
+    # round 1: both active; device 0 pushes +1, device 1 pushes -3
+    u1 = {"w": jnp.array([[1.0, 1.0], [-3.0, -3.0]])}
+    state, params, _ = algo.round_step(state, params, u1, jnp.zeros(2),
+                                       jnp.array([True, True]), jnp.float32(1.0))
+    np.testing.assert_allclose(params["w"], [1.0, 1.0])  # -1 * mean([1,-3])
+    # round 2: only device 0 active with a fresh update +5; device 1 stale -3
+    u2 = {"w": jnp.array([[5.0, 5.0], [999.0, 999.0]])}   # 999 must be ignored
+    state, params, _ = algo.round_step(state, params, u2, jnp.zeros(2),
+                                       jnp.array([True, False]), jnp.float32(1.0))
+    np.testing.assert_allclose(params["w"], [0.0, 0.0])  # 1 - mean([5,-3]) = 0
+    np.testing.assert_allclose(state["G"]["w"][1], [-3.0, -3.0])
+
+
+def test_delta_variant_identical_to_array():
+    """§4 'Discussion on implementation': the Ḡ running-mean form is exact."""
+    rng = jax.random.PRNGKey(0)
+    params = _tree(rng)
+    a1, a2 = MIFA(memory="array"), MIFA(memory="delta")
+    s1, s2 = a1.init_state(params, N), a2.init_state(params, N)
+    p1, p2 = params, params
+    key = jax.random.PRNGKey(99)
+    for t in range(8):
+        key, k1, k2 = jax.random.split(key, 3)
+        u = _updates(k1)
+        active = jax.random.bernoulli(k2, 0.5, (N,))
+        if t == 0:
+            active = jnp.ones(N, bool)
+        eta = jnp.float32(0.1 / (t + 1))
+        s1, p1, _ = a1.round_step(s1, p1, u, jnp.zeros(N), active, eta)
+        s2, p2, _ = a2.round_step(s2, p2, u, jnp.zeros(N), active, eta)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+
+def test_int8_memory_close_to_float():
+    rng = jax.random.PRNGKey(0)
+    params = _tree(rng)
+    a1, a2 = MIFA(memory="array"), MIFA(memory="int8")
+    s1, s2 = a1.init_state(params, N), a2.init_state(params, N)
+    p1, p2 = params, params
+    key = jax.random.PRNGKey(5)
+    for t in range(5):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        u = _updates(k1, scale=0.1)
+        active = jax.random.bernoulli(k2, 0.6, (N,))
+        if t == 0:
+            active = jnp.ones(N, bool)
+        eta = jnp.float32(0.05)
+        s1, p1, _ = a1.round_step(s1, p1, u, jnp.zeros(N), active, eta)
+        s2, p2, _ = a2.round_step(s2, p2, u, jnp.zeros(N), active, eta, rng=k3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        # int8 quantization error per round <= eta * scale/127 * rounds-ish
+        np.testing.assert_allclose(a, b, atol=5e-3)
+
+
+def test_int8_inactive_entries_bitstable():
+    """Inactive devices' stored int8 updates must not drift across rounds."""
+    params = {"w": jnp.zeros((3,))}
+    algo = MIFA(memory="int8")
+    state = algo.init_state(params, 2)
+    u = {"w": jnp.array([[0.3, -0.2, 0.1], [1.0, 2.0, -1.0]])}
+    key = jax.random.PRNGKey(0)
+    state, params, _ = algo.round_step(state, params, u, jnp.zeros(2),
+                                       jnp.array([True, True]),
+                                       jnp.float32(0.1), rng=key)
+    stored = np.asarray(state["G_q"]["w"][1])
+    for t in range(3):
+        u2 = {"w": jnp.array([[0.5, 0.5, 0.5], [7.0, 7.0, 7.0]])}
+        state, params, _ = algo.round_step(state, params, u2, jnp.zeros(2),
+                                           jnp.array([True, False]),
+                                           jnp.float32(0.1),
+                                           rng=jax.random.PRNGKey(t + 1))
+        np.testing.assert_array_equal(np.asarray(state["G_q"]["w"][1]), stored)
+
+
+def test_mifa_jits_and_round_counts():
+    params = {"w": jnp.zeros((2,))}
+    algo = MIFA(memory="array")
+    state = algo.init_state(params, 3)
+    step = jax.jit(algo.round_step)
+    u = {"w": jnp.ones((3, 2))}
+    state, params, m = step(state, params, u, jnp.zeros(3),
+                            jnp.array([True, True, False]), jnp.float32(1.0))
+    assert int(state["t"]) == 1
+    assert float(m["n_active"]) == 2.0

@@ -1,0 +1,81 @@
+"""Exactness of the perf-loop model variants (EXPERIMENTS.md §Perf):
+chunked CE and attention-head padding must be loss- AND grad-equal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+B, S = 2, 48
+
+
+def _batch(cfg, rng):
+    if cfg.modality == "vision_text":
+        return {"tokens": jax.random.randint(rng, (B, S - cfg.n_patches), 0,
+                                             cfg.vocab_size),
+                "patches": jax.random.normal(
+                    rng, (B, cfg.n_patches, cfg.d_model)) * 0.02}
+    if cfg.modality == "audio":
+        return {"frames": jax.random.normal(rng, (B, S, cfg.d_model)),
+                "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+def _loss_and_grads(cfg, params, batch):
+    model = build_model(cfg)
+    loss, _ = model.loss_fn(params, batch)
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    return float(loss), grads
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "llava_next_34b",
+                                  "hubert_xlarge", "gemma3_4b"])
+def test_chunked_ce_exact(arch):
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32",
+                                         param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    l0, g0 = _loss_and_grads(cfg, params, batch)
+    l1, g1 = _loss_and_grads(cfg.replace(ce_chunk=16), params, batch)
+    assert abs(l0 - l1) < 2e-6
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+@pytest.mark.parametrize("arch,pq,pkv", [("llava_next_34b", 16, 4),
+                                         ("gemma3_4b", 8, 4),
+                                         ("granite_3_8b", 16, 4)])
+def test_head_padding_exact(arch, pq, pkv):
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32",
+                                         param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    l0, g0 = _loss_and_grads(cfg, params, batch)
+    l1, g1 = _loss_and_grads(cfg.replace(pad_q_heads=pq, pad_kv_heads=pkv),
+                             params, batch)
+    assert l0 == l1  # padding is pure layout: bitwise identical
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_head_padding_prefill_decode_consistent():
+    """Padded prefill writes unpadded caches; decode stays consistent."""
+    cfg = get_smoke_config("gemma3_4b").replace(
+        compute_dtype="float32", param_dtype="float32",
+        pad_q_heads=8, pad_kv_heads=4)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init(rng)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    logits_pre, _ = model.prefill(params, {"tokens": tokens},
+                                  model.init_cache(B, 64))
+    _, cache = model.prefill(params, {"tokens": tokens[:, :-1]},
+                             model.init_cache(B, 64))
+    logits_dec, _ = model.decode_step(params, tokens[:, -1:],
+                                      jnp.int32(S - 1), cache)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_pre), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,51 @@
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (constant, cosine, inv_t, nonconvex_fixed,
+                         paper_strongly_convex, sgd_init, sgd_step)
+
+
+def test_inv_t_matches_paper_experiments():
+    s = inv_t(0.1)
+    assert s(1) == 0.1
+    assert s(10) == 0.1 / 10
+
+
+def test_strongly_convex_schedule():
+    mu, L, K = 0.1, 1.0, 5
+    s = paper_strongly_convex(mu, L, K, t0=0.0)
+    a = 100.0 * (L / mu) ** 1.5
+    assert s(1) == 4.0 / (mu * K * (1 + a))
+    assert s(100) < s(1)
+
+
+def test_nonconvex_schedule_constant():
+    s = nonconvex_fixed(N=10, K=5, T=1000, L=1.0, nu_bar=3.0)
+    assert s(1) == s(999)
+    assert s(1) == math.sqrt(10 / (5 * 1000 * 1.0 * 4.0)) / 5
+
+
+def test_cosine_warmup():
+    s = cosine(1.0, total=100, warmup=10)
+    assert s(0) < s(9) <= 1.0
+    assert abs(s(10) - 1.0) < 1e-9
+    assert s(100) < 1e-9 + 0.0
+
+
+def test_sgd_momentum():
+    params = {"w": jnp.zeros((2,))}
+    grads = {"w": jnp.ones((2,))}
+    st = sgd_init(params, momentum=0.9)
+    p1, st = sgd_step(params, grads, st, eta=0.1, momentum=0.9)
+    np.testing.assert_allclose(p1["w"], [-0.1, -0.1])
+    p2, st = sgd_step(p1, grads, st, eta=0.1, momentum=0.9)
+    np.testing.assert_allclose(p2["w"], [-0.29, -0.29], rtol=1e-6)
+
+
+def test_sgd_weight_decay():
+    params = {"w": jnp.ones((1,))}
+    grads = {"w": jnp.zeros((1,))}
+    p, _ = sgd_step(params, grads, {}, eta=0.1, weight_decay=0.5)
+    np.testing.assert_allclose(p["w"], [0.95])

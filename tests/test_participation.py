@@ -1,0 +1,69 @@
+import numpy as np
+import pytest
+
+from repro.core.participation import (AdversarialParticipation,
+                                      BernoulliParticipation,
+                                      TraceParticipation, TauStats,
+                                      label_correlated_probs, tau_matrix)
+
+
+def test_bernoulli_first_round_all_active():
+    p = BernoulliParticipation(np.full(20, 0.01), seed=0)
+    assert p.sample(0).all()
+
+
+def test_bernoulli_marginal_rate():
+    probs = np.linspace(0.1, 0.9, 10)
+    p = BernoulliParticipation(probs, seed=0)
+    masks = np.stack([p.sample(t) for t in range(1, 4001)])
+    rates = masks.mean(0)
+    assert np.allclose(rates, probs, atol=0.05)
+
+
+def test_label_correlated_probs_semantics():
+    labels = np.array([[0, 1], [9, 9], [4, 7]])
+    p = label_correlated_probs(labels, p_min=0.1)
+    assert p[0] == pytest.approx(0.1)      # straggler: smallest labels
+    assert p[1] == pytest.approx(1.0)
+    assert np.all((p >= 0.1) & (p <= 1.0))
+    assert p[0] < p[2] < p[1]              # smaller labels participate less
+
+
+def test_tau_stats_match_matrix():
+    rng = np.random.default_rng(0)
+    masks = rng.random((50, 8)) < 0.5
+    masks[0] = True
+    tm = tau_matrix(masks)
+    st = TauStats(8)
+    for t in range(50):
+        st.update(masks[t])
+    assert st.tau_bar == pytest.approx(tm.mean())
+    assert st.tau_max == tm.max()
+    assert st.d_bar == pytest.approx((tm.astype(float) ** 2).mean())
+    assert st.d_max_bar == pytest.approx((tm.max(0).astype(float) ** 2).mean())
+
+
+def test_adversarial_satisfies_assumption4():
+    n = 6
+    periods = np.array([4, 5, 6, 7, 8, 9])
+    offs = np.array([1, 2, 3, 3, 4, 4])
+    p = AdversarialParticipation(n, periods, offs)
+    masks = np.stack([p.sample(t) for t in range(200)])
+    tm = tau_matrix(masks)
+    # τ(t,i) is bounded by the longest blackout => Assumption 4 with t0=max(offs)
+    assert tm.max() <= offs.max()
+    assert masks[0].all()
+
+
+def test_trace_participation_forces_first_round():
+    tr = np.zeros((5, 3), bool)
+    p = TraceParticipation(tr)
+    assert p.sample(0).all()
+    assert not p.sample(1).any()
+
+
+def test_tau_grows_when_inactive():
+    masks = np.array([[True, True], [True, False], [True, False], [True, True]])
+    tm = tau_matrix(masks)
+    assert tm[:, 0].tolist() == [0, 0, 0, 0]
+    assert tm[:, 1].tolist() == [0, 1, 2, 0]

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MIFA, BiasedFedAvg, tau_matrix
+from repro.core.quantized_memory import dequantize_leaf, quantize_leaf
+from repro.models.layers import softmax_cross_entropy
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(1, 6))
+def test_mifa_fedavg_equivalence_property(seed, n, rounds):
+    """Remark 5.1 as a property: all-active MIFA == FedAvg for random trees."""
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (3,))}
+    am, af = MIFA(memory="array"), BiasedFedAvg()
+    sm, sf = am.init_state(params, n), af.init_state(params, n)
+    pm = pf = params
+    for t in range(rounds):
+        key, k = jax.random.split(key)
+        u = {"w": jax.random.normal(k, (n, 3))}
+        active = jnp.ones(n, bool)
+        eta = jnp.float32(0.1)
+        sm, pm, _ = am.round_step(sm, pm, u, jnp.zeros(n), active, eta)
+        sf, pf, _ = af.round_step(sf, pf, u, jnp.zeros(n), active, eta)
+    np.testing.assert_allclose(np.asarray(pm["w"]), np.asarray(pf["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(2, 10))
+def test_mifa_delta_equivalence_property(seed, n, rounds):
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (4,))}
+    a1, a2 = MIFA(memory="array"), MIFA(memory="delta")
+    s1, s2 = a1.init_state(params, n), a2.init_state(params, n)
+    p1 = p2 = params
+    for t in range(rounds):
+        key, k1, k2 = jax.random.split(key, 3)
+        u = {"w": jax.random.normal(k1, (n, 4))}
+        active = (jnp.ones(n, bool) if t == 0
+                  else jax.random.bernoulli(k2, 0.5, (n,)))
+        eta = jnp.float32(0.1)
+        s1, p1, _ = a1.round_step(s1, p1, u, jnp.zeros(n), active, eta)
+        s2, p2, _ = a2.round_step(s2, p2, u, jnp.zeros(n), active, eta)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_stochastic_rounding_unbiased(seed):
+    """E[dequant(quant(x))] == x — the property MIFA's analysis needs."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, 16)) * 0.37
+    acc = np.zeros((1, 16))
+    reps = 300
+    for i in range(reps):
+        q, s = quantize_leaf(jax.random.fold_in(key, i), x)
+        acc += np.asarray(dequantize_leaf(q, s))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    np.testing.assert_allclose(acc / reps, np.asarray(x),
+                               atol=4 * scale / np.sqrt(reps) + 1e-7)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 10))
+def test_tau_matrix_invariants(seed, T, n):
+    rng = np.random.default_rng(seed)
+    masks = rng.random((T, n)) < rng.random(n)
+    masks[0] = True
+    tm = tau_matrix(masks)
+    assert (tm >= 0).all()
+    assert (tm[masks] == 0).all()           # active => tau 0
+    if T > 1:
+        inc = tm[1:][~masks[1:]] - tm[:-1][~masks[1:]]
+        assert (inc == 1).all()             # inactive => tau increments
+    assert tm.max() < T                     # bounded by rounds since round 0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5), st.integers(2, 50))
+def test_cross_entropy_matches_numpy(seed, b, v):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (b, v)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, v)
+    got = float(softmax_cross_entropy(logits, labels))
+    ln = np.asarray(logits, np.float64)
+    p = np.exp(ln - ln.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = -np.log(p[np.arange(b), np.asarray(labels)]).mean()
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_client_update_is_grad_sum(seed, k):
+    """G^i == Σ_k ∇f(w_{t,k}) == (w_t - w_{t,K})/η  (paper Algorithm 1)."""
+    from repro.core.local_update import device_update
+    key = jax.random.PRNGKey(seed)
+
+    def loss_fn(p, mb):
+        return jnp.sum((p["w"] - mb) ** 2), {}
+
+    params = {"w": jax.random.normal(key, (3,))}
+    mbs = jax.random.normal(jax.random.fold_in(key, 1), (k, 3))
+    eta = 0.05
+    G, _ = device_update(loss_fn, params, mbs, jnp.float32(eta))
+    # replay manually
+    w = np.asarray(params["w"], np.float64)
+    for i in range(k):
+        g = 2 * (w - np.asarray(mbs[i], np.float64))
+        w = w - eta * g
+    manual = (np.asarray(params["w"], np.float64) - w) / eta
+    np.testing.assert_allclose(np.asarray(G["w"]), manual, rtol=1e-4, atol=1e-5)

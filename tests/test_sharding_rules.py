@@ -1,0 +1,130 @@
+"""Partition-rule unit tests on an abstract 16x16 (and 2x16x16) mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.sharding import rules
+
+
+def mesh_pod():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def mesh_multipod():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _params_sds(arch, full=True):
+    cfg = get_config(arch) if full else get_smoke_config(arch)
+    model = build_model(cfg)
+    return cfg, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _check_divisibility(specs, params, mesh):
+    for spec, leaf in zip(jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.leaves(params)):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n = rules._axis_size(mesh, entry)
+            assert dim % n == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible_pod(arch):
+    cfg, params = _params_sds(arch)
+    mesh = mesh_pod()
+    specs = rules.param_specs(params, cfg, mesh)
+    _check_divisibility(specs, params, mesh)
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_110b", "zamba2_7b", "olmoe_1b_7b"])
+def test_param_specs_divisible_multipod(arch):
+    cfg, params = _params_sds(arch)
+    mesh = mesh_multipod()
+    specs = rules.param_specs(params, cfg, mesh)
+    _check_divisibility(specs, params, mesh)
+
+
+def test_sanitize_drops_indivisible():
+    mesh = mesh_pod()
+    assert rules.sanitize(("model",), (49155,), mesh) == (None,)
+    assert rules.sanitize(("model",), (49152,), mesh) == ("model",)
+    assert rules.sanitize((("data", "model"),), (512,), mesh) == \
+        (("data", "model"),)
+    assert rules.sanitize((("data", "model"),), (128,), mesh) == (None,)
+
+
+def test_granite_vocab_replicated_but_dff_sharded():
+    cfg, params = _params_sds("granite_3_8b")
+    specs = rules.param_specs(params, cfg, mesh_pod())
+    assert tuple(specs["lm_head"]) == (None, None)      # 49155 indivisible
+    assert "model" in tuple(specs["segments"]["0"]["mlp"]["w1"])
+
+
+def test_gemma_flat_attention_sharded():
+    """8 heads < 16-way axis, but flat H*hd = 2048 shards."""
+    cfg, params = _params_sds("gemma3_4b")
+    specs = rules.param_specs(params, cfg, mesh_pod())
+    wq_spec = tuple(specs["segments"]["0"]["attn"]["wq"])
+    assert wq_spec[-1] == "model"
+
+
+def test_fsdp_two_axis_sharding():
+    cfg, params = _params_sds("qwen1_5_110b")
+    specs = rules.param_specs(params, cfg, mesh_pod())
+    w1 = tuple(specs["segments"]["0"]["mlp"]["w1"])     # (n, d, f)
+    assert w1[-2:] == ("data", "model")
+
+
+def test_moe_expert_parallel():
+    cfg, params = _params_sds("olmoe_1b_7b")
+    specs = rules.param_specs(params, cfg, mesh_pod())
+    w1 = tuple(specs["segments"]["0"]["moe"]["w1"])     # (n, E, d, f)
+    assert w1[1] == "model"
+
+
+def test_client_state_leading_axis():
+    cfg, params = _params_sds("granite_3_8b")
+    mesh = mesh_pod()
+    specs = rules.client_state_specs(params, cfg, mesh, n_clients=16)
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert tuple(s)[0] in ("data", ("data",))
+
+
+def test_client_state_sequential_keeps_2d():
+    cfg, params = _params_sds("qwen1_5_110b")
+    specs = rules.client_state_specs(params, cfg, mesh_pod(),
+                                     sequential_clients=True, n_clients=16)
+    w1 = tuple(specs["segments"]["0"]["mlp"]["w1"])     # (N, n, d, f)
+    assert w1[0] is None and w1[-2:] == ("data", "model")
+
+
+def test_cache_specs_kv_fallback_to_seq():
+    """granite kv=8 < 16-way model axis: cache seq dim takes `model`."""
+    cfg = get_config("granite_3_8b")
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = rules.cache_specs(cache, cfg, mesh_pod(), 128)
+    k = tuple(specs["0"]["k"])          # (n, B, C, KV, hd)
+    assert k[1] in ("data", ("data",)) and k[2] == "model"
+
+
+def test_cache_specs_b1_seq_over_data():
+    cfg = get_config("mamba2_1_3b")
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 1024))
+    specs = rules.cache_specs(cache, cfg, mesh_pod(), 1)
+    st = tuple(specs["0"]["state"])     # (n, B, H, P, N)
+    assert st[1] is None and st[2] == "model"
+
+
+def test_multipod_client_axis_spans_pods():
+    cfg, params = _params_sds("granite_3_8b")
+    mesh = mesh_multipod()
+    specs = rules.client_state_specs(params, cfg, mesh, n_clients=32)
+    lead = tuple(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))[0])[0]
+    assert lead == ("pod", "data")
