@@ -9,6 +9,8 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
   tau_stats        : Thm 5.2/5.3 τ statistics validation
   agg_throughput   : MIFA fused-aggregation traffic + kernel check
   roofline_bench   : §Roofline table from the dry-run artifacts
+  time_to_accuracy : simulated wall-clock to target loss, MIFA vs.
+                     straggler-bound round policies (repro.sim)
 """
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ def main() -> None:
     import fig2_convergence
     import roofline_bench
     import tau_stats
+    import time_to_accuracy
 
     modules = {
         "tau_stats": tau_stats,
@@ -41,6 +44,7 @@ def main() -> None:
         "case_study": case_study,
         "fig2_convergence": fig2_convergence,
         "roofline_bench": roofline_bench,
+        "time_to_accuracy": time_to_accuracy,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -6,4 +6,4 @@ from repro.core.participation import (AdversarialParticipation,  # noqa: F401
                                       BernoulliParticipation,
                                       TraceParticipation, TauStats,
                                       label_correlated_probs, tau_matrix)
-from repro.core.runner import run_fl, FLHistory  # noqa: F401
+from repro.core.runner import run_fl, FLHistory, RoundRunner  # noqa: F401

@@ -80,7 +80,8 @@ class AdversarialParticipation:
 
 class TraceParticipation:
     def __init__(self, trace: np.ndarray):
-        self.trace = np.asarray(trace, bool)
+        # copy: np.asarray can alias the input, and we overwrite row 0 below
+        self.trace = np.array(trace, bool, copy=True)
         self.trace[0, :] = True
         self.n = self.trace.shape[1]
 
@@ -105,17 +106,32 @@ class TauStats:
         self.sum_tau_sq = 0.0                         # Σ_t Σ_i τ(t,i)^2
         self.rounds = 0
         self.history: list[np.ndarray] = []
+        self.times: list[float] = []      # simulated seconds, if stamped
 
-    def update(self, active: np.ndarray, keep_history: bool = False):
+    def update(self, active: np.ndarray, keep_history: bool = False,
+               sim_time: float | None = None):
         """Call once per round *with the round's availability mask* (after the
-        mask is applied: τ=0 for active devices)."""
+        mask is applied: τ=0 for active devices). `sim_time` stamps the round
+        with simulated seconds (runtime-simulator runs)."""
         self.tau = np.where(active, 0, self.tau + 1)
         self.tau_max_per_dev = np.maximum(self.tau_max_per_dev, self.tau)
         self.sum_tau += float(self.tau.sum())
         self.sum_tau_sq += float((self.tau.astype(np.float64) ** 2).sum())
         self.rounds += 1
-        if keep_history:
+        if keep_history or sim_time is not None:
+            # times stays aligned with history: NaN for unstamped rounds
+            self.times.append(np.nan if sim_time is None else float(sim_time))
             self.history.append(self.tau.copy())
+
+    def timeline(self) -> tuple[np.ndarray, np.ndarray]:
+        """Time-stamped view: (times (R,), τ history (R, N)), row-aligned.
+
+        Populated by update() calls with sim_time or keep_history; rounds
+        recorded without a timestamp carry NaN in `times`.
+        """
+        return (np.asarray(self.times, np.float64),
+                np.stack(self.history) if self.history
+                else np.zeros((0, self.n), np.int64))
 
     # Definition 5.1 quantities over the rounds seen so far
     @property

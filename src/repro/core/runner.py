@@ -3,6 +3,15 @@
 The per-round computation (local K-step SGD on every client + algorithm
 aggregation) is a single jitted function; the availability mask and minibatch
 indices stream in from the host (they are the *environment*, not the model).
+
+`RoundRunner` owns the jitted round step and all history bookkeeping so that
+two drivers can share it unchanged:
+
+  * `run_fl`            — the paper's round-synchronous loop (one availability
+                          draw per round, no notion of time), and
+  * `repro.sim.engine`  — the discrete-event runtime simulator, which decides
+                          *when* each round closes and which updates arrived,
+                          and stamps every round with simulated seconds.
 """
 from __future__ import annotations
 
@@ -26,6 +35,8 @@ class FLHistory:
     eval_acc: list = field(default_factory=list)
     n_active: list = field(default_factory=list)
     global_updates: list = field(default_factory=list)
+    sim_seconds: list = field(default_factory=list)   # per-round close time
+    eval_seconds: list = field(default_factory=list)  # (round, sim_t) per eval
     wall_time: float = 0.0
     tau_bar: float = 0.0
     tau_max: int = 0
@@ -33,7 +44,112 @@ class FLHistory:
     def as_dict(self) -> dict:
         return {k: getattr(self, k) for k in
                 ("rounds", "train_loss", "eval_loss", "eval_acc", "n_active",
-                 "global_updates", "wall_time", "tau_bar", "tau_max")}
+                 "global_updates", "sim_seconds", "eval_seconds", "wall_time",
+                 "tau_bar", "tau_max")}
+
+    def record_round(self, t: int, metrics: dict,
+                     sim_time: float | None = None) -> None:
+        self.rounds.append(t)
+        self.train_loss.append(float(metrics["loss"]))
+        self.n_active.append(float(metrics["n_active"]))
+        if "global_updates" in metrics:
+            self.global_updates.append(float(metrics["global_updates"]))
+        if sim_time is not None:
+            self.sim_seconds.append(float(sim_time))
+
+    def record_eval(self, t: int, eval_loss: float, eval_acc: float,
+                    sim_time: float | None = None) -> None:
+        self.eval_loss.append((t, float(eval_loss)))
+        self.eval_acc.append((t, float(eval_acc)))
+        if sim_time is not None:
+            self.eval_seconds.append((t, float(sim_time)))
+
+    def eval_curve(self) -> list[tuple[float, float, float]]:
+        """Time-stamped view: (sim_seconds, eval_loss, eval_acc) triples.
+
+        Only meaningful for simulator-driven runs (sim_seconds populated);
+        round-synchronous runs fall back to the round index as the time axis.
+        """
+        times = dict(self.eval_seconds)
+        out = []
+        for (t, el), (_, ea) in zip(self.eval_loss, self.eval_acc):
+            out.append((times.get(t, float(t)), el, ea))
+        return out
+
+
+class RoundRunner:
+    """One jitted federated round + bookkeeping, shared across drivers.
+
+    The driver decides which mask of client updates is applied each round
+    (availability in the synchronous loop; arrivals in the simulator) and may
+    stamp each round with a simulated-seconds timestamp.
+    """
+
+    def __init__(self, *, model, algo, batcher, schedule: Callable,
+                 eta_local: Callable | float | None = None,
+                 weight_decay: float = 0.0, seed: int = 0,
+                 params=None, uses_update_clock: bool = False):
+        self.model = model
+        self.algo = algo
+        self.batcher = batcher
+        self.schedule = schedule
+        self.eta_local = eta_local
+        self.uses_update_clock = uses_update_clock
+        self.rng = jax.random.PRNGKey(seed)
+        self.params = model.init(self.rng) if params is None else params
+        self.n_clients = batcher.n_clients
+        self.state = algo.init_state(self.params, self.n_clients)
+        self.stats = TauStats(self.n_clients)
+        self.hist = FLHistory()
+
+        @jax.jit
+        def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
+            updates, losses = client_updates(model.loss_fn, params, batch,
+                                             eta_loc, K=batcher.k_steps,
+                                             weight_decay=weight_decay)
+            return algo.round_step(state, params, updates, losses, active,
+                                   eta_srv, rng)
+
+        self.round_fn = round_fn
+
+    def learning_rates(self, t: int) -> tuple[float, float]:
+        """η_local, η_server for round t (update-clock aware)."""
+        if self.uses_update_clock and "t_updates" in self.state:
+            clock = int(self.state["t_updates"]) + 1
+        else:
+            clock = t + 1
+        eta_srv = float(self.schedule(clock))
+        if self.eta_local is None:
+            eta_loc = eta_srv
+        elif callable(self.eta_local):
+            eta_loc = float(self.eta_local(clock))
+        else:
+            eta_loc = float(self.eta_local)
+        return eta_loc, eta_srv
+
+    def step(self, t: int, active: np.ndarray,
+             sim_time: float | None = None) -> dict:
+        """Apply one round with `active` as the applied-update mask."""
+        self.stats.update(np.asarray(active, bool), sim_time=sim_time)
+        batch = self.batcher.sample_round(t)
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rng, sub = jax.random.split(self.rng)
+        self.state, self.params, metrics = self.round_fn(
+            self.state, self.params, batch, jnp.asarray(active),
+            jnp.float32(eta_loc), jnp.float32(eta_srv), sub)
+        self.hist.record_round(t, metrics, sim_time=sim_time)
+        return metrics
+
+    def evaluate(self, t: int, eval_fn: Callable,
+                 sim_time: float | None = None) -> tuple[float, float]:
+        el, ea = eval_fn(self.params)
+        self.hist.record_eval(t, el, ea, sim_time=sim_time)
+        return float(el), float(ea)
+
+    def finalize(self) -> tuple[Any, FLHistory]:
+        self.hist.tau_bar = self.stats.tau_bar
+        self.hist.tau_max = self.stats.tau_max
+        return self.params, self.hist
 
 
 def run_fl(*, model, algo, participation, batcher, schedule: Callable,
@@ -42,61 +158,23 @@ def run_fl(*, model, algo, participation, batcher, schedule: Callable,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
            verbose: bool = False) -> tuple[Any, FLHistory]:
-    """Run T rounds of federated training. Returns (params, history).
+    """Run T round-synchronous rounds of federated training.
 
     batcher.sample_round(t) -> batch pytree with leaves (N, K, mb, ...).
     schedule(t) -> server/local learning rate η_t (paper uses the same for both).
     """
-    rng = jax.random.PRNGKey(seed)
-    if params is None:
-        params = model.init(rng)
-    n = batcher.n_clients
-    state = algo.init_state(params, n)
-    stats = TauStats(n)
-    hist = FLHistory()
-
-    @jax.jit
-    def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
-        updates, losses = client_updates(model.loss_fn, params, batch,
-                                         eta_loc, K=batcher.k_steps,
-                                         weight_decay=weight_decay)
-        return algo.round_step(state, params, updates, losses, active,
-                               eta_srv, rng)
-
+    runner = RoundRunner(model=model, algo=algo, batcher=batcher,
+                         schedule=schedule, eta_local=eta_local,
+                         weight_decay=weight_decay, seed=seed, params=params,
+                         uses_update_clock=uses_update_clock)
     t0 = time.time()
     for t in range(n_rounds):
         active = participation.sample(t)
-        stats.update(active)
-        batch = batcher.sample_round(t)
-        if uses_update_clock and "t_updates" in state:
-            clock = int(state["t_updates"]) + 1
-        else:
-            clock = t + 1
-        eta_srv = float(schedule(clock))
-        if eta_local is None:
-            eta_loc = eta_srv
-        elif callable(eta_local):
-            eta_loc = float(eta_local(clock))
-        else:
-            eta_loc = float(eta_local)
-        rng, sub = jax.random.split(rng)
-        state, params, metrics = round_fn(
-            state, params, batch, jnp.asarray(active),
-            jnp.float32(eta_loc), jnp.float32(eta_srv), sub)
-
-        hist.rounds.append(t)
-        hist.train_loss.append(float(metrics["loss"]))
-        hist.n_active.append(float(metrics["n_active"]))
-        if "global_updates" in metrics:
-            hist.global_updates.append(float(metrics["global_updates"]))
+        runner.step(t, active)
         if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
-            el, ea = eval_fn(params)
-            hist.eval_loss.append((t, float(el)))
-            hist.eval_acc.append((t, float(ea)))
+            el, ea = runner.evaluate(t, eval_fn)
             if verbose:
-                print(f"  round {t:5d} train={hist.train_loss[-1]:.4f} "
+                print(f"  round {t:5d} train={runner.hist.train_loss[-1]:.4f} "
                       f"eval={el:.4f} acc={ea:.4f} active={int(active.sum())}")
-    hist.wall_time = time.time() - t0
-    hist.tau_bar = stats.tau_bar
-    hist.tau_max = stats.tau_max
-    return params, hist
+    runner.hist.wall_time = time.time() - t0
+    return runner.finalize()

@@ -3,10 +3,41 @@
 Functions, not module-level constants: importing this module never touches JAX
 device state. The dry-run sets XLA_FLAGS for 512 host devices *before* any JAX
 import; smoke tests and benchmarks see the single real CPU device.
+
+Construction goes through version-portable helpers: the installed JAX may or
+may not expose `jax.sharding.AxisType` / accept `axis_types=` in
+`jax.make_mesh`, and `AbstractMesh` switched from positional (shape, names)
+to a single ((name, size), ...) shape_tuple.
 """
 from __future__ import annotations
 
 import jax
+
+
+def make_abstract_mesh(shape: tuple, axes: tuple):
+    """AbstractMesh across JAX versions.
+
+    Newer JAX takes one shape_tuple of (name, size) pairs; older releases
+    took positional (axis_shapes, axis_names).
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return AbstractMesh(shape, axes)
+
+
+def _make_mesh(shape: tuple, axes: tuple, devices=None):
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes),
+                                 **kwargs)
+        except TypeError:
+            pass  # this jax.make_mesh predates axis_types
+    return jax.make_mesh(shape, axes, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,14 +51,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     import numpy as _np
     n = int(_np.prod(shape))
     devices = jax.devices()[:n]
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return _make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

@@ -361,6 +361,8 @@ def analyze_compiled(compiled) -> dict:
         comps["__entry__"], symtab, comps, memo)
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older JAX: one dict per computation
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     out = {
         "hlo_flops_parsed": flops,

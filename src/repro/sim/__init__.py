@@ -1,0 +1,18 @@
+"""Discrete-event federated runtime simulator (simulated seconds, no sleeping).
+
+Layers:
+  * events   — heap-based event queue (arrival / round-close records).
+  * latency  — per-client round-trip-time models (shifted-exponential,
+               lognormal compute+comm, trace replay).
+  * policies — server round policies: WaitForAll, WaitForS (paper Eq. 3),
+               Deadline (over-select, drop late), Impatient (MIFA).
+  * engine   — FedSimEngine: drives RoundRunner rounds on a simulated clock,
+               reusing the availability processes in core.participation.
+"""
+from repro.sim.events import Event, EventQueue  # noqa: F401
+from repro.sim.latency import (LognormalLatency,  # noqa: F401
+                               ShiftedExponentialLatency, TraceLatency,
+                               tiered_shifted_exponential)
+from repro.sim.policies import (Deadline, Impatient,  # noqa: F401
+                                WaitForAll, WaitForS)
+from repro.sim.engine import FedSimEngine, SimConfig  # noqa: F401

@@ -1,0 +1,149 @@
+"""FedSimEngine — discrete-event driver for federated rounds.
+
+Simulated time advances on a heap of arrival events; nothing sleeps. The
+availability processes from `core.participation` are reinterpreted on a
+*temporal* axis: one draw per fixed-length availability epoch (`epoch_s`
+simulated seconds), cached so each epoch is drawn exactly once, in order
+(the processes hold stateful RNGs). A device dispatched while unavailable
+responds only after its next active epoch — this is where wait-for-straggler
+policies bleed wall-clock.
+
+Per server round t:
+  1. policy.select(t) picks the cohort; latency.sample(t) draws device RTTs.
+  2. Each cohort device's arrival time = (dispatch now, or the start of its
+     next active epoch) + its RTT; arrivals are pushed on the event heap.
+  3. policy.resolve(...) returns (close_time, applied_mask); the heap is
+     drained up to close_time (arrivals after it are logged as LATE/dropped).
+  4. RoundRunner.step(t, applied_mask, sim_time=close_time) applies the
+     global update through the *unchanged* jitted round API.
+
+The same algorithm/round API therefore runs under any temporal policy, and
+FLHistory/TauStats carry a simulated-seconds axis for time-to-accuracy plots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.runner import RoundRunner
+from repro.sim.events import ARRIVAL, LATE, ROUND_CLOSE, EventQueue
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    epoch_s: float = 4.0             # availability re-poll granularity
+    server_overhead_s: float = 0.05  # aggregation + broadcast per round
+    max_lookahead_epochs: int = 10_000  # device never back => arrival = inf
+
+
+class FedSimEngine:
+    def __init__(self, runner: RoundRunner, policy, participation, latency,
+                 config: SimConfig = SimConfig(), seed: int = 0):
+        assert latency.n == runner.n_clients, (latency.n, runner.n_clients)
+        self.runner = runner
+        self.policy = policy
+        self.participation = participation
+        self.latency = latency
+        self.config = config
+        self.rng = np.random.default_rng(seed)
+        self.queue = EventQueue()
+        self.now = 0.0
+        self.event_log: list[tuple] = []
+        self.round_log: list[dict] = []
+        # seed the cache with the epoch-0 draw: validates the process width
+        # without consuming a second sample(0) from stateful processes
+        mask0 = np.asarray(participation.sample(0), bool)
+        assert mask0.shape == (runner.n_clients,), \
+            (mask0.shape, runner.n_clients)
+        self._avail_cache: list[np.ndarray] = [mask0]
+        # epoch lookahead memo (valid because drawn epochs are immutable and
+        # queries move forward in time): next known active epoch per device,
+        # and the exclusive end of the last failed scan
+        self._next_active: dict[int, int] = {}
+        self._dark_until = np.zeros(runner.n_clients, np.int64)
+
+    # ------------------------------------------------------------------ #
+    def avail(self, epoch: int) -> np.ndarray:
+        """Availability mask for an epoch; drawn once, in epoch order."""
+        while len(self._avail_cache) <= epoch:
+            k = len(self._avail_cache)
+            self._avail_cache.append(
+                np.asarray(self.participation.sample(k), bool))
+        return self._avail_cache[epoch]
+
+    def _next_active_epoch(self, i: int, k0: int) -> int | None:
+        cached = self._next_active.get(i)
+        if cached is not None and cached > k0:
+            return cached
+        end = k0 + 1 + self.config.max_lookahead_epochs
+        for k in range(max(k0 + 1, int(self._dark_until[i])), end):
+            if self.avail(k)[i]:
+                self._next_active[i] = k
+                return k
+        self._dark_until[i] = end   # device i known inactive before `end`
+        return None
+
+    # ------------------------------------------------------------------ #
+    def run_round(self, t: int) -> dict:
+        cfg = self.config
+        n = self.runner.n_clients
+        now = self.now
+        cohort = np.asarray(self.policy.select(t, n, self.rng), bool)
+        rtt = np.asarray(self.latency.sample(t), np.float64)
+        k0 = int(now // cfg.epoch_s)
+        avail_now = self.avail(k0)
+
+        arrivals = np.full(n, np.inf)
+        for i in np.flatnonzero(cohort):
+            if avail_now[i]:
+                start = now
+            else:
+                k = self._next_active_epoch(i, k0)
+                if k is None:
+                    continue                      # never returns: stays inf
+                start = k * cfg.epoch_s
+            arrivals[i] = start + rtt[i]
+            self.queue.push(arrivals[i], ARRIVAL, client=i, round=t)
+
+        close, applied = self.policy.resolve(cohort, avail_now, arrivals,
+                                             now, cfg.epoch_s)
+        n_late = 0
+        while len(self.queue):
+            ev = self.queue.pop()
+            if ev.time <= close and applied[ev.client]:
+                self.event_log.append(ev.as_tuple())
+            else:  # late responder (deadline) or unwaited-for (impatient)
+                n_late += 1
+                self.event_log.append((close, ev.seq, LATE, ev.client, t))
+        self.event_log.append((close, -1, ROUND_CLOSE, -1, t))
+
+        metrics = self.runner.step(t, applied, sim_time=close)
+        self.now = close + cfg.server_overhead_s
+        rec = {"round": t, "t_open": now, "t_close": close,
+               "duration_s": close - now,
+               "n_dispatched": int(cohort.sum()),
+               "n_applied": int(applied.sum()), "n_late": n_late,
+               "train_loss": float(metrics["loss"])}
+        self.round_log.append(rec)
+        return rec
+
+    def run(self, n_rounds: int, *, eval_fn: Callable | None = None,
+            eval_every: int = 10, max_sim_seconds: float | None = None):
+        """Simulate up to n_rounds (or until the simulated clock runs out).
+
+        `max_sim_seconds` is checked at round close — rounds are not
+        pre-empted, so the final round may overshoot the budget (by however
+        long that round's policy blocked). Returns (params, FLHistory) with
+        sim_seconds/eval_seconds populated."""
+        for t in range(n_rounds):
+            self.run_round(t)
+            last = (t == n_rounds - 1 or
+                    (max_sim_seconds is not None
+                     and self.now >= max_sim_seconds))
+            if eval_fn is not None and (t % eval_every == 0 or last):
+                self.runner.evaluate(t, eval_fn, sim_time=self.now)
+            if last:
+                break
+        return self.runner.finalize()

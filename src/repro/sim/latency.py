@@ -1,0 +1,77 @@
+"""Per-client round-trip latency models (compute + communication, seconds).
+
+`sample(t)` returns the full (N,) latency vector for round t; the engine
+indexes the cohort out of it, so draws are identical regardless of which
+clients a policy selects — runs with different policies but the same seeds see
+the same device speeds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _per_client(x, n: int) -> np.ndarray:
+    out = np.broadcast_to(np.asarray(x, np.float64), (n,)).copy()
+    assert np.all(out >= 0), "latency parameters must be non-negative"
+    return out
+
+
+class ShiftedExponentialLatency:
+    """t_i = shift_i + Exp(scale_i): the classic straggler model — a
+    deterministic floor (compute at full utilisation + link RTT) plus an
+    exponential tail (contention, background load)."""
+
+    def __init__(self, shifts, scales, n: int | None = None, seed: int = 0):
+        n = n if n is not None else len(np.atleast_1d(shifts))
+        self.n = n
+        self.shifts = _per_client(shifts, n)
+        self.scales = _per_client(scales, n)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, t: int) -> np.ndarray:
+        return self.shifts + self.rng.exponential(self.scales)
+
+
+class LognormalLatency:
+    """Compute time exp(N(mu_i, sigma_i)) plus a fixed comm cost comm_i —
+    heavy-tailed device speed, as measured in production FL fleets."""
+
+    def __init__(self, mu, sigma, comm=0.0, n: int | None = None,
+                 seed: int = 0):
+        n = n if n is not None else len(np.atleast_1d(mu))
+        self.n = n
+        self.mu = np.broadcast_to(np.asarray(mu, np.float64), (n,)).copy()
+        self.sigma = _per_client(sigma, n)
+        self.comm = _per_client(comm, n)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, t: int) -> np.ndarray:
+        return np.exp(self.rng.normal(self.mu, self.sigma)) + self.comm
+
+
+class TraceLatency:
+    """Replay a recorded (T, N) matrix of round-trip seconds; rounds past the
+    trace end replay the last row."""
+
+    def __init__(self, trace: np.ndarray):
+        self.trace = np.array(trace, np.float64, copy=True)
+        assert self.trace.ndim == 2 and np.all(self.trace >= 0)
+        self.n = self.trace.shape[1]
+
+    def sample(self, t: int) -> np.ndarray:
+        return self.trace[min(t, len(self.trace) - 1)].copy()
+
+
+def tiered_shifted_exponential(n: int, *, tiers=((2.0, 1.0), (1.0, 0.4),
+                                                 (0.4, 0.15)),
+                               seed: int = 0) -> ShiftedExponentialLatency:
+    """Device-tier fleet: equal thirds of (shift, scale) tiers, slowest first —
+    mirrors the slow/mid/fast split of the adversarial availability benchmark."""
+    shifts = np.empty(n)
+    scales = np.empty(n)
+    k = len(tiers)
+    for j, (sh, sc) in enumerate(tiers):
+        lo = j * n // k
+        hi = (j + 1) * n // k if j < k - 1 else n
+        shifts[lo:hi], scales[lo:hi] = sh, sc
+    return ShiftedExponentialLatency(shifts, scales, seed=seed)

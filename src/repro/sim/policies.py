@@ -1,0 +1,96 @@
+"""Server round policies: who is dispatched, when the round closes, whose
+updates are applied.
+
+The engine hands each policy the cohort it selected, the availability mask at
+dispatch time, and the (N,) arrival-time vector (np.inf = never arrives within
+the lookahead horizon), and gets back (close_time, applied_mask):
+
+  * WaitForAll — broadcast to every device; block until ALL respond. Offline
+    devices respond only after their next active availability epoch, so a
+    single blackout device stalls the fleet.
+  * WaitForS   — the paper's Eq. 3 protocol: sample S devices uniformly, block
+    until all S respond. Because the engine applies one global update per
+    round at close time, all S updates are computed at the same (frozen)
+    iterate — exactly the straggler-prone baseline `FedAvgSampling`
+    approximates without a clock.
+  * Deadline   — broadcast (or over-select a cohort), close at a fixed
+    deadline, drop late responders. Fast but biased against slow devices.
+  * Impatient  — MIFA's server: close as soon as every *currently available*
+    device has responded; never wait for unavailable ones (memory corrects
+    the bias on the algorithm side).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def _sample_cohort(n: int, k: int, rng) -> np.ndarray:
+    mask = np.zeros(n, bool)
+    mask[rng.permutation(n)[:k]] = True
+    return mask
+
+
+def _close_at_last_finite(arrivals: np.ndarray, mask: np.ndarray, now: float,
+                          idle_s: float) -> tuple[float, np.ndarray]:
+    applied = mask & np.isfinite(arrivals)
+    if not applied.any():
+        return now + idle_s, applied
+    return float(arrivals[applied].max()), applied
+
+
+@dataclass(frozen=True)
+class WaitForAll:
+    name: str = "wait_for_all"
+
+    def select(self, t: int, n: int, rng) -> np.ndarray:
+        return np.ones(n, bool)
+
+    def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        return _close_at_last_finite(arrivals, cohort, now, epoch_s)
+
+
+@dataclass(frozen=True)
+class WaitForS:
+    s: int
+    name: str = "wait_for_s"
+
+    def select(self, t: int, n: int, rng) -> np.ndarray:
+        return _sample_cohort(n, self.s, rng)
+
+    def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        return _close_at_last_finite(arrivals, cohort, now, epoch_s)
+
+
+@dataclass(frozen=True)
+class Deadline:
+    """Close at now + deadline_s; apply whoever arrived. cohort_size=None
+    broadcasts to all devices (over-selection in the limit)."""
+
+    deadline_s: float
+    cohort_size: int | None = None
+    name: str = "deadline"
+
+    def select(self, t: int, n: int, rng) -> np.ndarray:
+        if self.cohort_size is None or self.cohort_size >= n:
+            return np.ones(n, bool)
+        return _sample_cohort(n, self.cohort_size, rng)
+
+    def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        close = now + self.deadline_s
+        return close, cohort & (arrivals <= close)
+
+
+@dataclass(frozen=True)
+class Impatient:
+    """MIFA: wait only for devices available at dispatch time."""
+
+    name: str = "impatient"
+
+    def select(self, t: int, n: int, rng) -> np.ndarray:
+        return np.ones(n, bool)
+
+    def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        return _close_at_last_finite(arrivals, cohort & avail_now, now,
+                                     epoch_s)

@@ -62,6 +62,12 @@ def test_trace_participation_forces_first_round():
     assert not p.sample(1).any()
 
 
+def test_trace_participation_does_not_mutate_input():
+    tr = np.zeros((5, 3), bool)
+    TraceParticipation(tr)
+    assert not tr.any()          # row 0 forced active only on the copy
+
+
 def test_tau_grows_when_inactive():
     masks = np.array([[True, True], [True, False], [True, False], [True, True]])
     tm = tau_matrix(masks)

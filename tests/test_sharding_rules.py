@@ -2,19 +2,20 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import build_model
 from repro.sharding import rules
 
 
 def mesh_pod():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multipod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _params_sds(arch, full=True):

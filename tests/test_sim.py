@@ -1,0 +1,172 @@
+"""Discrete-event runtime simulator: determinism, policy ordering,
+latency models, and the Assumption-4 property of the blackout patterns."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (MIFA, AdversarialParticipation, BiasedFedAvg,
+                        RoundRunner, tau_matrix)
+from repro.data import ClientBatcher, label_skew_partition, make_classification
+from repro.models import build_model
+from repro.optim import inv_t
+from repro.sim import (Deadline, EventQueue, FedSimEngine, Impatient,
+                       LognormalLatency, ShiftedExponentialLatency, SimConfig,
+                       TraceLatency, WaitForAll, WaitForS,
+                       tiered_shifted_exponential)
+
+N = 9
+
+
+def make_runner(algo, seed=0):
+    cfg = get_config("paper_logistic").replace(fl_clients=N)
+    model = build_model(cfg)
+    X, y = make_classification(10, cfg.d_model, 60, seed=0)
+    idx, _ = label_skew_partition(y, N, seed=0)
+    batcher = ClientBatcher(X, y, idx, batch_size=8, k_steps=2, seed=0)
+    return RoundRunner(model=model, algo=algo, batcher=batcher,
+                       schedule=inv_t(1.0), weight_decay=1e-3, seed=seed)
+
+
+def blackout(seed=0):
+    periods = np.array([4] * 3 + [3] * 3 + [8] * 3)
+    offs = np.array([3] * 3 + [1] * 3 + [1] * 3)
+    phases = np.random.default_rng(seed).integers(0, 8, N)
+    return AdversarialParticipation(N, periods, offs, phases)
+
+
+def make_engine(policy, algo, seed=0):
+    return FedSimEngine(make_runner(algo), policy, blackout(),
+                        tiered_shifted_exponential(N, seed=7),
+                        config=SimConfig(epoch_s=4.0), seed=13 + seed)
+
+
+# --------------------------------------------------------------------------- #
+# event queue
+# --------------------------------------------------------------------------- #
+
+def test_event_queue_fifo_on_ties():
+    q = EventQueue()
+    q.push(5.0, "arrival", client=0)
+    q.push(1.0, "arrival", client=1)
+    q.push(1.0, "arrival", client=2)
+    popped = [q.pop() for _ in range(3)]
+    assert [e.client for e in popped] == [1, 2, 0]
+    assert popped[0].seq < popped[1].seq
+
+
+# --------------------------------------------------------------------------- #
+# engine determinism + simulated-seconds axis
+# --------------------------------------------------------------------------- #
+
+def test_engine_deterministic_event_sequence():
+    logs = []
+    for _ in range(2):
+        eng = make_engine(Impatient(), MIFA(memory="array"))
+        _, hist = eng.run(8)
+        logs.append((list(eng.event_log), list(hist.sim_seconds)))
+    assert logs[0][0] == logs[1][0]        # identical event sequence
+    assert logs[0][1] == logs[1][1]        # identical round close times
+
+
+def test_sim_seconds_strictly_increasing():
+    eng = make_engine(WaitForS(s=3), BiasedFedAvg())
+    _, hist = eng.run(10)
+    t = np.asarray(hist.sim_seconds)
+    assert len(t) == 10 and np.all(np.diff(t) > 0)
+    assert len(eng.runner.stats.times) == 10   # TauStats timestamped view
+    times, taus = eng.runner.stats.timeline()
+    assert taus.shape == (10, N) and np.all(np.diff(times) > 0)
+
+
+def test_impatient_never_slower_than_wait_for_all():
+    rounds = 10
+    eng_imp = make_engine(Impatient(), BiasedFedAvg())
+    eng_all = make_engine(WaitForAll(), BiasedFedAvg())
+    eng_imp.run(rounds)
+    eng_all.run(rounds)
+    # same seeds => identical latency draws; waiting for blacked-out devices
+    # can only lengthen each round
+    imp = [r["duration_s"] for r in eng_imp.round_log]
+    al = [r["duration_s"] for r in eng_all.round_log]
+    assert all(a <= b + 1e-9 for a, b in zip(imp, al))
+    assert eng_imp.now < eng_all.now
+
+
+def test_deadline_drops_late_responders():
+    eng = make_engine(Deadline(deadline_s=0.5), BiasedFedAvg())
+    eng.run(6)
+    # 0.5s deadline < slow-tier shift (2.0s): slow devices must be dropped
+    assert all(r["duration_s"] == pytest.approx(0.5) for r in eng.round_log)
+    assert any(r["n_late"] > 0 for r in eng.round_log[1:])
+    assert all(r["n_applied"] < N for r in eng.round_log[1:])
+
+
+def test_wait_for_s_applies_exactly_s():
+    eng = make_engine(WaitForS(s=4), BiasedFedAvg())
+    eng.run(6)
+    assert all(r["n_applied"] == 4 for r in eng.round_log)
+
+
+def test_max_sim_seconds_stops_at_first_round_close_past_budget():
+    ref = make_engine(WaitForS(s=3), BiasedFedAvg())
+    ref.run(20)
+    budget = ref.round_log[4]["t_close"]    # exactly 5 rounds fit
+    eng = make_engine(WaitForS(s=3), BiasedFedAvg())
+    _, hist = eng.run(20, max_sim_seconds=budget)
+    # checked at round close: stops at the first round ending >= budget,
+    # which may overshoot by that round's duration but never runs another
+    assert len(hist.rounds) == 5
+    assert hist.sim_seconds[-1] >= budget
+    assert hist.sim_seconds[-2] < budget
+
+
+def test_round0_all_devices_respond():
+    eng = make_engine(Impatient(), MIFA(memory="array"))
+    rec = eng.run_round(0)
+    assert rec["n_applied"] == N   # paper Remark 5.2: round 0 all active
+
+
+# --------------------------------------------------------------------------- #
+# latency models
+# --------------------------------------------------------------------------- #
+
+def test_latency_models_shapes_and_determinism():
+    for make in (lambda s: ShiftedExponentialLatency(0.5, 1.0, n=N, seed=s),
+                 lambda s: LognormalLatency(0.0, 0.5, comm=0.1, n=N, seed=s),
+                 lambda s: tiered_shifted_exponential(N, seed=s)):
+        a, b = make(3), make(3)
+        sa = np.stack([a.sample(t) for t in range(5)])
+        sb = np.stack([b.sample(t) for t in range(5)])
+        assert sa.shape == (5, N) and np.all(sa > 0)
+        np.testing.assert_array_equal(sa, sb)
+
+
+def test_trace_latency_replays_and_clamps():
+    trace = np.arange(6, dtype=float).reshape(2, 3)
+    lat = TraceLatency(trace)
+    np.testing.assert_array_equal(lat.sample(0), [0, 1, 2])
+    np.testing.assert_array_equal(lat.sample(7), [3, 4, 5])
+    trace[0, 0] = 99.0                      # no aliasing of caller's array
+    assert lat.sample(0)[0] == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Assumption 4 property for the periodic-blackout patterns
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(4))
+def test_adversarial_blackouts_satisfy_assumption4(seed):
+    """τ(t,i) <= t0 + t/b with t0 = max blackout length, for any b >= 1."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    periods = rng.integers(2, 12, n)
+    offs = np.minimum(rng.integers(1, 10, n), periods - 1)
+    p = AdversarialParticipation(n, periods, offs,
+                                 rng.integers(0, 12, n))
+    masks = np.stack([p.sample(t) for t in range(300)])
+    tm = tau_matrix(masks)
+    t0 = int(offs.max())
+    assert tm.max() <= t0                   # bounded staleness
+    t_idx = np.arange(300)[:, None]
+    for b in (1, 4, 16):
+        assert np.all(tm <= t0 + t_idx / b)
