@@ -1,0 +1,156 @@
+"""Bank scale sweep: cohort rounds must be flat in N, linear in |A(t)|.
+
+Fixed cohort size C, N ∈ {10², 10⁴, 10⁵, 10⁶}: per-round wall time and bank
+memory for the MemoryBank backends, against the dense O(N·d) MIFA round at
+small N (the thing that stops scaling). Then a cohort sweep at fixed N to
+show the cost that *should* grow (linear in C) does.
+
+Backends on this CPU container:
+  * host / int8_paged — O(C·d) per round (numpy row writes); int8_paged's
+    resident bytes additionally track clients-ever-seen, not N.
+  * dense — O(C·d) when the jitted scatter updates rows in place (donated
+    buffers / XLA's in-place scatter); swept to 10⁵ to bound device-memory
+    use and benchmark runtime on CI hosts.
+
+Usage:
+    PYTHONPATH=src python benchmarks/run.py --only bank_scale [--fast]
+Artifacts: benchmarks/artifacts/bank_scale.json (+ CSV rows on stdout).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from common import emit, save_artifact
+
+from repro.bank import BankedMIFA, make_bank
+from repro.core import MIFA
+from repro.core.runner import RoundRunner
+from repro.data import ProceduralBatcher
+from repro.models.layers import softmax_cross_entropy
+
+DIM, CLASSES = 16, 2
+
+
+class TinyLogistic:
+    """Minimal model shim (init/loss_fn) — d = DIM·CLASSES + CLASSES."""
+
+    def init(self, rng):
+        return {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+                "b": jnp.zeros((CLASSES,), jnp.float32)}
+
+    def loss_fn(self, params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return softmax_cross_entropy(logits, batch["y"]), {}
+
+
+def _draw_cohort(rng, n: int, c: int) -> np.ndarray:
+    """<=c unique ids in O(c) — no O(N) permutation at N=10⁶."""
+    return np.unique(rng.integers(0, n, size=2 * c))[:c]
+
+
+def _runner(backend: str, n: int, cohort: int, seed: int = 0) -> RoundRunner:
+    batcher = ProceduralBatcher(n_clients=n, dim=DIM, n_classes=CLASSES,
+                                batch_size=8, k_steps=2, seed=seed)
+    return RoundRunner(model=TinyLogistic(), algo=BankedMIFA(make_bank(backend)),
+                       batcher=batcher, schedule=lambda t: 0.1, seed=seed,
+                       cohort_capacity=cohort)
+
+
+def time_bank_rounds(backend: str, n: int, cohort: int, *, rounds: int,
+                     warmup: int = 3, seed: int = 0) -> dict:
+    runner = _runner(backend, n, cohort, seed=seed)
+    rng = np.random.default_rng(seed)
+    for t in range(warmup):
+        runner.step_cohort(t, _draw_cohort(rng, n, cohort))
+    jax.block_until_ready(runner.params)
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + rounds):
+        runner.step_cohort(t, _draw_cohort(rng, n, cohort))
+    jax.block_until_ready(runner.params)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    mem = runner.algo.bank.memory_bytes(runner.state["bank"])
+    return {"backend": backend, "n": n, "cohort": cohort, "us_per_round": us,
+            "device_bytes": mem["device"], "host_bytes": mem["host"],
+            "final_loss": runner.hist.train_loss[-1]}
+
+
+def time_dense_mifa_rounds(n: int, *, rounds: int, warmup: int = 2,
+                           seed: int = 0) -> dict:
+    """The O(N·d) baseline: every round vmaps client_updates over ALL N."""
+    batcher = ProceduralBatcher(n_clients=n, dim=DIM, n_classes=CLASSES,
+                                batch_size=8, k_steps=2, seed=seed)
+    runner = RoundRunner(model=TinyLogistic(), algo=MIFA(memory="array"),
+                         batcher=batcher, schedule=lambda t: 0.1, seed=seed)
+    mask = np.zeros(n, bool)
+    mask[:: max(n // 32, 1)] = True              # ~32 active, rest memorized
+    for t in range(warmup):
+        runner.step(t, mask)
+    jax.block_until_ready(runner.params)
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + rounds):
+        runner.step(t, mask)
+    jax.block_until_ready(runner.params)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    g_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(runner.state["G"]))
+    return {"backend": "dense_mifa_O(N)", "n": n, "cohort": int(mask.sum()),
+            "us_per_round": us, "device_bytes": g_bytes, "host_bytes": 0,
+            "final_loss": runner.hist.train_loss[-1]}
+
+
+def main(fast: bool = False) -> None:
+    cohort = 16 if fast else 32
+    rounds = 3 if fast else 10
+    ns = [100, 2_000] if fast else [100, 10_000, 100_000, 1_000_000]
+    sweeps = {
+        "host": ns,
+        "int8_paged": ns,
+        "dense": [n for n in ns if n <= 100_000],
+    }
+    baseline_ns = [100, 1_000] if fast else [100, 10_000]
+
+    rows = []
+    for n in baseline_ns:
+        row = time_dense_mifa_rounds(n, rounds=rounds)
+        rows.append(row)
+        emit(f"bank_scale/dense_mifa_n{n}", row["us_per_round"],
+             f"device_mb={row['device_bytes'] / 1e6:.1f}")
+    for backend, sweep in sweeps.items():
+        per_n = []
+        for n in sweep:
+            row = time_bank_rounds(backend, n, cohort, rounds=rounds)
+            rows.append(row)
+            per_n.append(row)
+            emit(f"bank_scale/{backend}_n{n}", row["us_per_round"],
+                 f"host_mb={row['host_bytes'] / 1e6:.1f},"
+                 f"device_mb={row['device_bytes'] / 1e6:.1f}")
+        # flat-in-N check: largest-N round vs smallest-N round
+        ratio = per_n[-1]["us_per_round"] / per_n[0]["us_per_round"]
+        n_ratio = per_n[-1]["n"] / per_n[0]["n"]
+        emit(f"bank_scale/{backend}_flatness", 0.0,
+             f"time_ratio={ratio:.2f}_over_{n_ratio:.0f}x_N")
+
+    # the dimension that SHOULD grow: cohort size at fixed N
+    n_fixed = 2_000 if fast else 100_000
+    cohort_rows = []
+    for c in ([8, 32] if fast else [8, 32, 128, 512]):
+        row = time_bank_rounds("host", n_fixed, c, rounds=rounds)
+        cohort_rows.append(row)
+        emit(f"bank_scale/host_n{n_fixed}_c{c}", row["us_per_round"],
+             f"cohort={c}")
+
+    save_artifact("bank_scale", {"rows": rows, "cohort_rows": cohort_rows,
+                                 "cohort": cohort, "rounds": rounds})
+
+    # sanity, not a timing assert: scaling 10-10000x in N must not blow up
+    # host-bank round time anywhere near linearly (allow generous jitter)
+    host = [r for r in rows if r["backend"] == "host"]
+    ratio = host[-1]["us_per_round"] / host[0]["us_per_round"]
+    n_ratio = host[-1]["n"] / host[0]["n"]
+    assert ratio < max(8.0, 0.05 * n_ratio), (ratio, n_ratio)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
   roofline_bench   : §Roofline table from the dry-run artifacts
   time_to_accuracy : simulated wall-clock to target loss, MIFA vs.
                      straggler-bound round policies (repro.sim)
+  bank_scale       : memory-bank cohort rounds flat in N up to 10⁶ clients
+                     (repro.bank), vs the O(N·d) dense round
 """
 from __future__ import annotations
 
@@ -31,6 +33,7 @@ def main() -> None:
 
     import adversarial
     import agg_throughput
+    import bank_scale
     import case_study
     import fig2_convergence
     import roofline_bench
@@ -45,6 +48,7 @@ def main() -> None:
         "fig2_convergence": fig2_convergence,
         "roofline_bench": roofline_bench,
         "time_to_accuracy": time_to_accuracy,
+        "bank_scale": bank_scale,
     }
     print("name,us_per_call,derived")
     failed = []

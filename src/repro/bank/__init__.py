@@ -1,0 +1,18 @@
+"""Sharded memory-bank subsystem: cohort-sized MIFA server state (DESIGN.md §3)."""
+from repro.bank.base import MemoryBank  # noqa: F401
+from repro.bank.dense import DenseBank  # noqa: F401
+from repro.bank.host import HostBank  # noqa: F401
+from repro.bank.int8_paged import Int8PagedBank  # noqa: F401
+from repro.bank.mifa_bank import BankedMIFA  # noqa: F401
+
+_BACKENDS = {"dense": DenseBank, "host": HostBank, "int8_paged": Int8PagedBank}
+
+
+def make_bank(backend: str = "dense", **kwargs) -> MemoryBank:
+    """backend: 'dense' | 'host' | 'int8_paged' (kwargs -> backend ctor)."""
+    try:
+        return _BACKENDS[backend](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown bank backend {backend!r}; "
+            f"choose from {sorted(_BACKENDS)}") from None

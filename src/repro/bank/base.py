@@ -1,0 +1,104 @@
+"""MemoryBank — sparse server memory for cohort-sized MIFA rounds.
+
+MIFA's server state is one row per client: G^i, the client's latest K-step
+update. The dense implementation (core.mifa) rewrites the whole (N, d) array
+every round; a MemoryBank exposes the same state through row-sparse access so
+a round touches only the active cohort A(t):
+
+    gather(state, ids)            -> the cohort's stored rows (|A|, ...)
+    scatter(state, ids, updates)  -> new state with those rows replaced
+
+and maintains the running sum  G_sum = Σ_i G^i  incrementally via the delta
+identity (DESIGN.md §3)
+
+    G_sum += Σ_{a ∈ A} (u_a − G_old_a)
+
+so the server step's  mean_G = G_sum / N  is O(d), never O(N·d). A cohort
+round is therefore O(|A|·d) compute + traffic regardless of N.
+
+Backends (bank/__init__.py `make_bank`):
+  * DenseBank     — jnp (N+1, ...) rows on device; exact reference; jittable;
+                    optional fused Pallas gather/delta/scatter path; rows can
+                    be sharded over the mesh's client/data axes.
+  * HostBank      — fp32 rows in host RAM (numpy); only cohort rows cross the
+                    host↔device boundary; zero device memory for the bank.
+  * Int8PagedBank — host-resident int8 rows + per-(row, leaf) absmax scales
+                    (core.quantized_memory), allocated lazily in fixed-size
+                    pages: clients that never participated cost nothing.
+
+Padding convention: drivers pad a variable-size cohort to a fixed capacity so
+jit traces are reused. Pad slots carry `valid=False` and point `ids` at the
+dummy row index N (DenseBank allocates N+1 rows; host backends simply drop
+invalid slots). Pad slots never touch G_sum or any real row.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class MemoryBank:
+    """Interface; see backend modules for the concrete layouts.
+
+    `init` must be called exactly once per training run — backends are cheap
+    config holders until then and remember `n_clients` afterwards.
+    """
+
+    #: True when `scatter` consumes/produces jnp pytrees and may run under jit.
+    jittable: bool = False
+
+    def init(self, params: Any, n_clients: int) -> dict:
+        """Zero-filled bank state for `n_clients` rows shaped like `params`."""
+        raise NotImplementedError
+
+    def gather(self, state: dict, ids) -> Any:
+        """Stored rows for `ids` as an f32 pytree with leading axis len(ids)."""
+        raise NotImplementedError
+
+    def scatter(self, state: dict, ids, updates, *, valid=None,
+                rng=None) -> dict:
+        """Write the cohort's fresh updates and maintain G_sum.
+
+        ids (C,) int row indices; updates: f32 pytree, leaves (C, ...);
+        valid (C,) bool (None => all valid); rng only for quantizing backends.
+        Returns the new state (the old one must not be reused).
+        """
+        raise NotImplementedError
+
+    def mean_g(self, state: dict) -> Any:
+        """G_sum / N as a device (jnp) pytree with param-shaped leaves."""
+        raise NotImplementedError
+
+    def memory_bytes(self, state: dict) -> dict:
+        """{'device': bytes, 'host': bytes} currently held by the bank."""
+        raise NotImplementedError
+
+
+def broadcast_valid(valid: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """valid (C,) -> broadcastable to leaf (C, ...)."""
+    return valid.reshape((valid.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def check_unique_ids(ids, valid=None) -> None:
+    """Reject duplicate *valid* ids in one scatter call.
+
+    With duplicates, each copy's delta is computed against the original row
+    but only one write survives — G_sum would silently diverge from the sum
+    of rows forever after. Cohorts are sets; samplers drawing with
+    replacement must np.unique first (see benchmarks/bank_scale.py).
+
+    Best-effort eager validation only: under a jit trace (DenseBank is
+    jittable) ids are abstract and the check is skipped.
+    """
+    import jax.core
+    if isinstance(ids, jax.core.Tracer):
+        return
+    ids = np.asarray(ids)
+    if valid is not None:
+        ids = ids[np.asarray(valid, bool)]
+    if len(np.unique(ids)) != len(ids):
+        raise ValueError(
+            "duplicate client ids in one scatter call would corrupt G_sum; "
+            "deduplicate the cohort (np.unique) before applying it")

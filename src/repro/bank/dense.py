@@ -1,0 +1,118 @@
+"""DenseBank — on-device jnp rows; the exact-equivalence reference backend.
+
+State layout:
+    rows  : pytree, leaves (N+1, *param_shape) `dtype` — row N is the dummy
+            row that padded cohort slots scatter into (a no-op write).
+    g_sum : pytree, leaves (*param_shape,) f32 — running Σ_{i<N} rows[i].
+
+`scatter` is one jitted call (buffers donated, so the rows update in place on
+backends that support donation). Two implementations, property-tested against
+each other:
+  * jnp reference — gather + masked delta + `.at[ids].set`;
+  * fused Pallas  — `kernels.bank_scatter` streams only the cohort rows
+    through VMEM (use_pallas=True, or auto on real TPUs).
+
+With `mesh`/`cfg` given, rows are laid out with `sharding.rules.bank_row_specs`
+— the client axis sharded over the mesh's data (and pod) axes, exactly like
+the dense MIFA update array. The row count is padded up so the client axis
+divides the mesh (sharding.rules.padded_bank_rows).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.bank.base import MemoryBank, broadcast_valid, check_unique_ids
+
+
+@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
+def _scatter(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.ops import bank_update_tree
+        rows_new, dsum = bank_update_tree(rows, updates, ids, valid)
+        g_sum = jax.tree.map(jnp.add, g_sum, dsum)
+        return rows_new, g_sum
+
+    def one(r, u, gs):
+        old = r[ids]                                   # (C, ...) r.dtype
+        u_st = u.astype(r.dtype)
+        vb = broadcast_valid(valid, u)
+        delta = jnp.where(vb, u_st.astype(jnp.float32)
+                          - old.astype(jnp.float32), 0.0)
+        r_new = r.at[ids].set(jnp.where(vb, u_st, old))
+        return r_new, gs + jnp.sum(delta, axis=0)
+
+    out = jax.tree.map(one, rows, updates, g_sum)
+    rows_new = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda o: isinstance(o, tuple))
+    g_new = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    return rows_new, g_new
+
+
+class DenseBank(MemoryBank):
+    jittable = True
+
+    def __init__(self, *, dtype: str = "float32",
+                 use_pallas: bool | None = None, mesh=None, cfg=None):
+        self.dtype = jnp.dtype(dtype)
+        self._use_pallas = use_pallas
+        self.mesh = mesh
+        self.cfg = cfg
+        self.n = 0
+        self.n_rows = 0
+
+    # ------------------------------------------------------------------ #
+    def _pallas(self) -> bool:
+        if self._use_pallas is not None:
+            return self._use_pallas
+        from repro.kernels.backend import interpret_default
+        # interpret-mode Pallas is orders of magnitude slower than jnp on
+        # CPU; only take the kernel path when it would actually compile.
+        return not interpret_default()
+
+    def init(self, params, n_clients: int) -> dict:
+        self.n = n_clients
+        if self.mesh is not None:
+            from repro.sharding.rules import padded_bank_rows
+            self.n_rows = padded_bank_rows(n_clients, self.mesh)
+        else:
+            self.n_rows = n_clients + 1
+        rows = jax.tree.map(
+            lambda p: jnp.zeros((self.n_rows,) + p.shape, self.dtype), params)
+        g_sum = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.sharding.rules import bank_row_specs
+            specs = bank_row_specs(params, self.cfg, self.mesh,
+                                   n_rows=self.n_rows)
+            rows = jax.tree.map(
+                lambda r, s: jax.device_put(r, NamedSharding(self.mesh, s)),
+                rows, specs)
+        return {"rows": rows, "g_sum": g_sum}
+
+    def gather(self, state: dict, ids):
+        ids = jnp.asarray(ids, jnp.int32)
+        return jax.tree.map(lambda r: r[ids].astype(jnp.float32),
+                            state["rows"])
+
+    def scatter(self, state: dict, ids, updates, *, valid=None,
+                rng=None) -> dict:
+        check_unique_ids(ids, valid)
+        ids = jnp.asarray(ids, jnp.int32)
+        valid = (jnp.ones(ids.shape, bool) if valid is None
+                 else jnp.asarray(valid, bool))
+        rows, g_sum = _scatter(state["rows"], state["g_sum"], ids, valid,
+                               updates, use_pallas=self._pallas())
+        return {"rows": rows, "g_sum": g_sum}
+
+    def mean_g(self, state: dict):
+        return jax.tree.map(lambda g: g / self.n, state["g_sum"])
+
+    def memory_bytes(self, state: dict) -> dict:
+        dev = sum(leaf.nbytes for leaf in jax.tree.leaves(state["rows"]))
+        dev += sum(leaf.nbytes for leaf in jax.tree.leaves(state["g_sum"]))
+        return {"device": dev, "host": 0}

@@ -1,0 +1,67 @@
+"""HostBank — fp32 rows in host RAM; zero device memory for the bank.
+
+The O(N·d) memory lives where it is cheapest (host DRAM); only the cohort's
+rows ever cross the host↔device boundary: updates (|A|, d) come down once per
+round, mean_G (d,) goes up once per round. Gather/scatter are numpy fancy
+indexing — O(|A|·d) — and G_sum is maintained with the same delta identity as
+every other backend, so host rounds are exactly equivalent to DenseBank
+rounds (fp32, modulo summation order).
+
+State arrays are mutated in place (numpy), but the state dict itself is
+returned fresh each scatter to keep the backend-agnostic "new state" calling
+convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank.base import MemoryBank, check_unique_ids
+
+
+class HostBank(MemoryBank):
+    jittable = False
+
+    def __init__(self):
+        self.n = 0
+
+    def init(self, params, n_clients: int) -> dict:
+        self.n = n_clients
+        rows = jax.tree.map(
+            lambda p: np.zeros((n_clients,) + tuple(p.shape), np.float32),
+            params)
+        g_sum = jax.tree.map(
+            lambda p: np.zeros(tuple(p.shape), np.float32), params)
+        return {"rows": rows, "g_sum": g_sum}
+
+    def gather(self, state: dict, ids):
+        ids = np.asarray(ids, np.int64)
+        return jax.tree.map(lambda r: jnp.asarray(r[ids]), state["rows"])
+
+    def scatter(self, state: dict, ids, updates, *, valid=None,
+                rng=None) -> dict:
+        check_unique_ids(ids, valid)
+        ids = np.asarray(ids, np.int64)
+        if valid is None:
+            keep = np.ones(ids.shape, bool)
+        else:
+            keep = np.asarray(valid, bool)
+        ids = ids[keep]
+
+        def one(r, gs, u):
+            u = np.asarray(u, np.float32)[keep]        # cohort rows only
+            gs += (u - r[ids]).sum(axis=0, dtype=np.float32)
+            r[ids] = u
+
+        jax.tree.map(one, state["rows"], state["g_sum"], updates)
+        return {"rows": state["rows"], "g_sum": state["g_sum"]}
+
+    def mean_g(self, state: dict):
+        return jax.tree.map(lambda g: jnp.asarray(g / self.n),
+                            state["g_sum"])
+
+    def memory_bytes(self, state: dict) -> dict:
+        host = sum(leaf.nbytes for leaf in jax.tree.leaves(state["rows"]))
+        host += sum(leaf.nbytes for leaf in jax.tree.leaves(state["g_sum"]))
+        return {"device": 0, "host": host}

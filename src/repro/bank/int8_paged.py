@@ -1,0 +1,116 @@
+"""Int8PagedBank — lazily-paged int8 rows + per-(row, leaf) absmax scales.
+
+Reuses `core.quantized_memory`'s stochastic-rounding quantizer (the same
+unbiasedness argument: the stored row stays an unbiased estimator of the true
+update, which is what MIFA's analysis needs). Beyond the 4x dtype saving,
+rows are allocated in fixed-size *pages* only when a client in that page
+first participates — under production availability (|A(t)| ≪ N, long-tail
+clients that never show up) the resident set is proportional to the number of
+clients *ever seen*, not N.
+
+Layout (host RAM, per parameter leaf):
+    pages[leaf][p] = int8  (page_size, *leaf_shape)   quantized rows
+    scales[leaf][p] = f32  (page_size,)               absmax / 127 per row
+A missing page reads as exact zeros (every client's initial G^i = 0, scale 0
+=> dequantizes to 0 exactly, matching the fp32 banks at init).
+
+G_sum is maintained in f32 over *dequantized* values, so the invariant
+G_sum == Σ_i dequant(row_i) holds exactly (modulo fp summation order) and
+mean_g is consistent with what gather returns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank.base import MemoryBank, check_unique_ids
+from repro.core import quantized_memory as qm
+
+
+class Int8PagedBank(MemoryBank):
+    jittable = False
+
+    def __init__(self, *, page_size: int = 1024):
+        assert page_size > 0
+        self.page_size = page_size
+        self.n = 0
+
+    # ------------------------------------------------------------------ #
+    def init(self, params, n_clients: int) -> dict:
+        self.n = n_clients
+        leaves, treedef = jax.tree.flatten(params)
+        return {
+            "treedef": treedef,
+            "shapes": [tuple(leaf.shape) for leaf in leaves],
+            "pages": [{} for _ in leaves],    # page idx -> int8 rows
+            "scales": [{} for _ in leaves],   # page idx -> f32 scales
+            "g_sum": [np.zeros(tuple(leaf.shape), np.float32)
+                      for leaf in leaves],
+        }
+
+    def _rows(self, state: dict, li: int, ids: np.ndarray) -> np.ndarray:
+        """Dequantized rows (len(ids), *shape) for leaf li; zeros if unseen."""
+        shape = state["shapes"][li]
+        out = np.zeros((len(ids),) + shape, np.float32)
+        pages, scales = state["pages"][li], state["scales"][li]
+        for k, i in enumerate(ids):
+            p, off = divmod(int(i), self.page_size)
+            if p in pages:
+                sc = scales[p][off]
+                out[k] = pages[p][off].astype(np.float32) * sc
+        return out
+
+    def gather(self, state: dict, ids):
+        ids = np.asarray(ids, np.int64)
+        leaves = [jnp.asarray(self._rows(state, li, ids))
+                  for li in range(len(state["shapes"]))]
+        return jax.tree.unflatten(state["treedef"], leaves)
+
+    def scatter(self, state: dict, ids, updates, *, valid=None,
+                rng=None) -> dict:
+        assert rng is not None, "int8 bank needs an rng for rounding"
+        check_unique_ids(ids, valid)
+        ids = np.asarray(ids, np.int64)
+        keep = (np.ones(ids.shape, bool) if valid is None
+                else np.asarray(valid, bool))
+        ids = ids[keep]
+        if ids.size == 0:    # empty round (e.g. a blackout under Impatient)
+            return state
+        u_leaves, treedef = jax.tree.flatten(updates)
+        assert treedef == state["treedef"], (treedef, state["treedef"])
+        rngs = jax.random.split(rng, len(u_leaves))
+
+        for li, u in enumerate(u_leaves):
+            u = jnp.asarray(u, jnp.float32)[np.flatnonzero(keep)]
+            q, s = qm.quantize_leaf(rngs[li], u)
+            q, s = np.asarray(q), np.asarray(s, np.float32)
+            # what the bank will answer for these rows from now on
+            u_eff = q.astype(np.float32) * s.reshape((-1,) + (1,) * (q.ndim - 1))
+            old = self._rows(state, li, ids)
+            state["g_sum"][li] += (u_eff - old).sum(axis=0, dtype=np.float32)
+            pages, scales = state["pages"][li], state["scales"][li]
+            shape = state["shapes"][li]
+            for k, i in enumerate(ids):
+                p, off = divmod(int(i), self.page_size)
+                if p not in pages:
+                    pages[p] = np.zeros((self.page_size,) + shape, np.int8)
+                    scales[p] = np.zeros((self.page_size,), np.float32)
+                pages[p][off] = q[k]
+                scales[p][off] = s[k]
+        return state
+
+    def mean_g(self, state: dict):
+        leaves = [jnp.asarray(g / self.n) for g in state["g_sum"]]
+        return jax.tree.unflatten(state["treedef"], leaves)
+
+    # ------------------------------------------------------------------ #
+    def n_pages(self, state: dict) -> int:
+        return max((len(p) for p in state["pages"]), default=0)
+
+    def memory_bytes(self, state: dict) -> dict:
+        host = sum(a.nbytes for leaf in state["pages"] for a in leaf.values())
+        host += sum(a.nbytes for leaf in state["scales"]
+                    for a in leaf.values())
+        host += sum(g.nbytes for g in state["g_sum"])
+        return {"device": 0, "host": host}

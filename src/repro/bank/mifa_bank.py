@@ -1,0 +1,44 @@
+"""BankedMIFA — MIFA driven through a MemoryBank: O(|A(t)|·d) rounds.
+
+Mathematically identical to `core.mifa.MIFA(memory="array")` (property-tested
+in tests/test_bank.py): each round the cohort's fresh updates replace their
+stored rows, and the server moves by η · G_sum / N. The difference is purely
+operational — the round only ever *touches* cohort rows, so compute, memory
+traffic, and (for the paged backend) resident memory scale with the cohort,
+not with N.
+
+`RoundRunner` detects `cohort_based = True` and switches to the compact round
+path: `client_updates` runs on (|A|, ...) batches and this class applies them
+through the bank. The synchronous `run_fl` loop and the discrete-event
+`sim.engine.FedSimEngine` both drive that path unchanged (they only ever see
+`runner.step(t, mask)`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.bank.base import MemoryBank
+
+
+class BankedMIFA:
+    """memory-bank MIFA; `bank` picks the storage backend."""
+
+    cohort_based = True
+
+    def __init__(self, bank: MemoryBank):
+        self.bank = bank
+
+    def init_state(self, params, n_clients: int) -> dict:
+        return {"bank": self.bank.init(params, n_clients), "t": 0}
+
+    def round_step_cohort(self, state: dict, ids, valid, updates, losses,
+                          rng=None):
+        """ids (C,) padded row indices; valid (C,) mask; updates/losses for
+        the padded cohort. Returns (new_state, mean_G, metrics)."""
+        bank_state = self.bank.scatter(state["bank"], ids, updates,
+                                       valid=valid, rng=rng)
+        mean_g = self.bank.mean_g(bank_state)
+        v = jnp.asarray(valid, jnp.float32)
+        loss = jnp.sum(jnp.asarray(losses) * v) / jnp.maximum(jnp.sum(v), 1.0)
+        metrics = {"loss": loss, "n_active": jnp.sum(v)}
+        return ({"bank": bank_state, "t": state["t"] + 1}, mean_g, metrics)

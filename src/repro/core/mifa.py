@@ -7,12 +7,17 @@ carry a leading client axis (N, *param_shape) sharded client→data. Each round:
           = (w_t − w^i_{t,K}) / η_t    if i ∈ A(t)      (fresh K-step update)
     w_{t+1} = w_t − η_t · (1/N) Σ_i G^i_t
 
-Three memory layouts (DESIGN.md §3):
+Three dense memory layouts (DESIGN.md §3):
   * "array"  — paper-faithful float update array (fp32/bf16).
   * "delta"  — the paper's §4 memory-efficient variant: server keeps only the
     running mean Ḡ; per-client previous updates are separate state (on-device
     in a real deployment). Mathematically identical — property-tested.
   * "int8"   — beyond-paper: stochastically-rounded int8 array.
+
+All three pay O(N·d) per round. For cohort-sized O(|A(t)|·d) rounds at large
+N, use `repro.bank.BankedMIFA` — the same algorithm through a row-sparse
+MemoryBank (dense / host-offloaded / int8-paged backends), property-tested
+equivalent to memory="array".
 
 `round_step` consumes precomputed per-client updates (from
 core.local_update.client_updates), so the aggregation is a pure, kernel-

@@ -77,40 +77,78 @@ class FLHistory:
         return out
 
 
+def _pow2_bucket(c: int) -> int:
+    """Smallest power of two >= c — pads cohorts into few jit traces."""
+    return 1 << max(int(np.ceil(np.log2(max(c, 1)))), 0)
+
+
 class RoundRunner:
     """One jitted federated round + bookkeeping, shared across drivers.
 
     The driver decides which mask of client updates is applied each round
     (availability in the synchronous loop; arrivals in the simulator) and may
     stamp each round with a simulated-seconds timestamp.
+
+    Two round paths, selected by the algorithm:
+
+      * dense (default)             — `client_updates` vmaps over ALL N
+        clients and `algo.round_step` consumes the (N, ...) update array;
+      * cohort (`algo.cohort_based`) — only the active cohort's batches are
+        sampled and updated: compact (C, ...) leaves where C is |A(t)| padded
+        to a power-of-two bucket (or `cohort_capacity`), then applied through
+        the algorithm's memory bank. Pad slots carry valid=False and point at
+        the bank's dummy row `n_clients`. O(|A|·d) per round instead of
+        O(N·d); both `run_fl` and `sim.engine` drive it unchanged via
+        `step(t, mask)`, and million-client drivers can call
+        `step_cohort(t, ids)` directly to skip O(N) mask work entirely.
     """
 
     def __init__(self, *, model, algo, batcher, schedule: Callable,
                  eta_local: Callable | float | None = None,
                  weight_decay: float = 0.0, seed: int = 0,
-                 params=None, uses_update_clock: bool = False):
+                 params=None, uses_update_clock: bool = False,
+                 cohort_capacity: int | None = None):
         self.model = model
         self.algo = algo
         self.batcher = batcher
         self.schedule = schedule
         self.eta_local = eta_local
         self.uses_update_clock = uses_update_clock
+        self.cohort_capacity = cohort_capacity
         self.rng = jax.random.PRNGKey(seed)
         self.params = model.init(self.rng) if params is None else params
         self.n_clients = batcher.n_clients
         self.state = algo.init_state(self.params, self.n_clients)
         self.stats = TauStats(self.n_clients)
         self.hist = FLHistory()
+        self.cohort_mode = getattr(algo, "cohort_based", False)
 
-        @jax.jit
-        def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
-            updates, losses = client_updates(model.loss_fn, params, batch,
-                                             eta_loc, K=batcher.k_steps,
-                                             weight_decay=weight_decay)
-            return algo.round_step(state, params, updates, losses, active,
-                                   eta_srv, rng)
+        if self.cohort_mode:
+            @jax.jit
+            def cohort_updates_fn(params, batch, eta_loc):
+                return client_updates(model.loss_fn, params, batch, eta_loc,
+                                      K=batcher.k_steps,
+                                      weight_decay=weight_decay)
 
-        self.round_fn = round_fn
+            @jax.jit
+            def apply_mean_fn(params, mean_g, eta_srv):
+                return jax.tree.map(
+                    lambda w, g: (w - eta_srv * g).astype(w.dtype),
+                    params, mean_g)
+
+            self.cohort_updates_fn = cohort_updates_fn
+            self.apply_mean_fn = apply_mean_fn
+            self.round_fn = None
+        else:
+            @jax.jit
+            def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
+                updates, losses = client_updates(model.loss_fn, params, batch,
+                                                 eta_loc, K=batcher.k_steps,
+                                                 weight_decay=weight_decay)
+                return algo.round_step(state, params, updates, losses, active,
+                                       eta_srv, rng)
+
+            self.round_fn = round_fn
 
     def learning_rates(self, t: int) -> tuple[float, float]:
         """η_local, η_server for round t (update-clock aware)."""
@@ -131,12 +169,49 @@ class RoundRunner:
              sim_time: float | None = None) -> dict:
         """Apply one round with `active` as the applied-update mask."""
         self.stats.update(np.asarray(active, bool), sim_time=sim_time)
+        if self.cohort_mode:
+            ids = np.flatnonzero(np.asarray(active, bool))
+            return self.step_cohort(t, ids, sim_time=sim_time)
         batch = self.batcher.sample_round(t)
         eta_loc, eta_srv = self.learning_rates(t)
         self.rng, sub = jax.random.split(self.rng)
         self.state, self.params, metrics = self.round_fn(
             self.state, self.params, batch, jnp.asarray(active),
             jnp.float32(eta_loc), jnp.float32(eta_srv), sub)
+        self.hist.record_round(t, metrics, sim_time=sim_time)
+        return metrics
+
+    def step_cohort(self, t: int, ids: np.ndarray,
+                    sim_time: float | None = None) -> dict:
+        """Apply one O(|A|·d) cohort round; `ids` are the active client rows.
+
+        Called directly (million-client drivers), τ statistics are skipped —
+        TauStats is itself O(N) per round. `step` keeps them.
+        """
+        assert self.cohort_mode, "step_cohort needs a cohort_based algorithm"
+        from repro.bank.base import check_unique_ids
+        ids = np.asarray(ids, np.int64)
+        check_unique_ids(ids)    # duplicates would corrupt the bank's G_sum
+        c = len(ids)
+        cap = self.cohort_capacity or _pow2_bucket(c)
+        if c > cap:          # stochastic overflow past the configured capacity
+            cap = _pow2_bucket(c)
+        padded = np.full(cap, self.n_clients, np.int64)   # pad -> dummy row
+        padded[:c] = ids
+        valid = np.zeros(cap, bool)
+        valid[:c] = True
+        # pad slots still need *some* real client's batch shape; row 0's
+        # content is computed then discarded by the valid mask
+        batch = self.batcher.sample_round(
+            t, client_ids=np.where(valid, padded, 0))
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rng, sub = jax.random.split(self.rng)
+        updates, losses = self.cohort_updates_fn(self.params, batch,
+                                                 jnp.float32(eta_loc))
+        self.state, mean_g, metrics = self.algo.round_step_cohort(
+            self.state, padded, valid, updates, losses, rng=sub)
+        self.params = self.apply_mean_fn(self.params, mean_g,
+                                         jnp.float32(eta_srv))
         self.hist.record_round(t, metrics, sim_time=sim_time)
         return metrics
 

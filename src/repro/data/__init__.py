@@ -1,3 +1,4 @@
 from repro.data.synthetic import make_classification  # noqa: F401
 from repro.data.partition import label_skew_partition  # noqa: F401
-from repro.data.pipeline import ClientBatcher, TokenBatcher  # noqa: F401
+from repro.data.pipeline import (ClientBatcher, ProceduralBatcher,  # noqa: F401
+                                 TokenBatcher)

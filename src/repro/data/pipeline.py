@@ -2,6 +2,14 @@
 
 `sample_round(t)` yields a pytree whose leaves have shape (N, K, mb, ...):
 one minibatch per client per local step, reproducible from (seed, t).
+
+`sample_round(t, client_ids=ids)` yields the *compact* cohort variant —
+leaves (len(ids), K, mb, ...) holding exactly the rows the full call would
+have produced for those clients (same (seed, t, i) streams), in `ids` order.
+The cohort round path (core.runner / repro.bank) lives on this: batch
+assembly is O(|A|), never O(N). `ProceduralBatcher` pushes that to the data
+itself — client shards are regenerated from (seed, client) on demand, so
+million-client runs hold no per-client state at all.
 """
 from __future__ import annotations
 
@@ -24,15 +32,18 @@ class ClientBatcher:
         self.seed = seed
         self.dim = X.shape[1]
 
-    def sample_round(self, t: int) -> dict:
-        mb, K, N = self.batch_size, self.k_steps, self.n_clients
-        xs = np.empty((N, K, mb, self.dim), np.float32)
-        ys = np.empty((N, K, mb), np.int32)
-        for i in range(N):
+    def sample_round(self, t: int, client_ids=None) -> dict:
+        mb, K = self.batch_size, self.k_steps
+        ids = (np.arange(self.n_clients) if client_ids is None
+               else np.asarray(client_ids, np.int64))
+        xs = np.empty((len(ids), K, mb, self.dim), np.float32)
+        ys = np.empty((len(ids), K, mb), np.int32)
+        for j, i in enumerate(ids):
+            i = int(i)
             rng = np.random.default_rng((self.seed, t, i))
             idx = rng.integers(0, len(self.ys[i]), size=(K, mb))
-            xs[i] = self.Xs[i][idx]
-            ys[i] = self.ys[i][idx]
+            xs[j] = self.Xs[i][idx]
+            ys[j] = self.ys[i][idx]
         return {"x": xs, "y": ys}
 
 
@@ -52,14 +63,63 @@ class TokenBatcher:
         self.k_steps = k_steps
         self.seed = seed
 
-    def sample_round(self, t: int) -> dict:
-        mb, K, N, S = self.batch_size, self.k_steps, self.n_clients, self.seq_len
-        out = np.empty((N, K, mb, S), np.int32)
-        for i in range(N):
+    def sample_round(self, t: int, client_ids=None) -> dict:
+        mb, K, S = self.batch_size, self.k_steps, self.seq_len
+        ids = (np.arange(self.n_clients) if client_ids is None
+               else np.asarray(client_ids, np.int64))
+        out = np.empty((len(ids), K, mb, S), np.int32)
+        for j, i in enumerate(ids):
+            i = int(i)
             rng = np.random.default_rng((self.seed, t, i, 7))
             starts = rng.integers(0, len(self.streams[i]) - S - 1, size=(K, mb))
             for k in range(K):
                 for b in range(mb):
                     s = starts[k, b]
-                    out[i, k, b] = self.streams[i][s:s + S]
+                    out[j, k, b] = self.streams[i][s:s + S]
         return {"tokens": out}
+
+
+class ProceduralBatcher:
+    """Stateless tabular batches for million-client cohort runs.
+
+    No per-client storage: client i's shard is an infinite stream defined by
+    (seed, i) — features are a client-specific mean shift (non-iid, label-
+    correlated like data.partition's label skew) plus noise, labels come from
+    a fixed random linear teacher. Identical draws whether a client is
+    sampled via the full path or a compact cohort, so ProceduralBatcher is a
+    drop-in for ClientBatcher at any N.
+    """
+
+    def __init__(self, *, n_clients: int, dim: int, n_classes: int = 2,
+                 batch_size: int, k_steps: int, shift: float = 1.0,
+                 noise: float = 1.0, seed: int = 0):
+        self.n_clients = n_clients
+        self.dim = dim
+        self.n_classes = n_classes
+        self.batch_size = batch_size
+        self.k_steps = k_steps
+        self.shift = shift
+        self.noise = noise
+        self.seed = seed
+        teacher_rng = np.random.default_rng((seed, 0x7EAC))
+        self.teacher = teacher_rng.normal(size=(dim, n_classes)) \
+            .astype(np.float32)
+
+    def _client_mean(self, i: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, 0xC11E27, i))
+        return (self.shift * rng.normal(size=self.dim)).astype(np.float32)
+
+    def sample_round(self, t: int, client_ids=None) -> dict:
+        mb, K = self.batch_size, self.k_steps
+        ids = (np.arange(self.n_clients) if client_ids is None
+               else np.asarray(client_ids, np.int64))
+        xs = np.empty((len(ids), K, mb, self.dim), np.float32)
+        ys = np.empty((len(ids), K, mb), np.int32)
+        for j, i in enumerate(ids):
+            i = int(i)
+            rng = np.random.default_rng((self.seed, t, i))
+            x = rng.normal(size=(K, mb, self.dim)).astype(np.float32) \
+                * self.noise + self._client_mean(i)
+            xs[j] = x
+            ys[j] = np.argmax(x @ self.teacher, axis=-1).astype(np.int32)
+        return {"x": xs, "y": ys}

@@ -1,4 +1,6 @@
 """Pallas TPU kernels (+ jit wrappers in ops.py, jnp oracles in ref.py)."""
+from repro.kernels.backend import use_pallas  # noqa: F401
+from repro.kernels.bank_scatter import bank_scatter  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.mifa_aggregate import mifa_aggregate  # noqa: F401
 from repro.kernels.ssd_scan import ssd_scan  # noqa: F401

@@ -1,0 +1,40 @@
+"""Pallas backend selection: compiled on real accelerators, interpret on CPU.
+
+Every kernel entry point takes `interpret: bool | None = None`; `None` means
+"auto": interpret mode iff `jax.default_backend() == "cpu"` (this container),
+compiled Mosaic otherwise. `use_pallas(True/False/None)` forces compiled /
+interpret / auto globally — resolution happens *outside* the jitted wrappers,
+so flipping it mid-process retriggers compilation instead of hitting a stale
+jit cache keyed on `interpret=None`.
+
+Detection is deliberately lazy (a function, not a module-level constant):
+importing a kernels module must never initialize the JAX backend — the
+dry-run driver sets XLA_FLAGS for 512 host devices before first JAX use.
+"""
+from __future__ import annotations
+
+import jax
+
+_FORCED: bool | None = None
+
+
+def use_pallas(enabled: bool | None) -> None:
+    """Force compiled Pallas (True), interpret mode (False), or auto (None)."""
+    global _FORCED
+    _FORCED = enabled
+
+
+def interpret_default() -> bool:
+    """True when kernels should run in interpret mode on this process.
+
+    Compiled only on real TPUs: the kernels use pltpu primitives (VMEM
+    scratch, PrefetchScalarGridSpec) that Mosaic cannot lower for GPU, so a
+    CUDA host must fall back to interpret mode exactly like CPU.
+    """
+    if _FORCED is not None:
+        return not _FORCED
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return interpret_default() if interpret is None else bool(interpret)

@@ -1,0 +1,107 @@
+"""Fused row-gather / delta / scatter Pallas kernel for the memory bank.
+
+The bank update touched by a cohort round is
+
+    old_a      = bank[ids[a]]                      (gather)
+    delta_sum += Σ_a valid_a · (u_a − old_a)       (running-sum maintenance)
+    bank[ids[a]] = u_a        if valid_a           (scatter)
+
+Done naively with jnp this is three passes over the cohort rows (gather,
+delta reduction, `.at[ids].set`) plus a full-array copy for the scatter.
+The kernel streams each active row's column tile through VMEM exactly once
+— read old, accumulate the delta, write the fresh update back in place
+(`input_output_aliases` donates the bank buffer, so untouched rows are
+never copied). HBM traffic is O(|A|·d) regardless of the bank's N.
+
+Grid: (column tiles, cohort rows) — the cohort axis is innermost so the
+delta-sum output tile stays resident in VMEM and accumulates across rows
+(the classic k-loop pattern). Row ids arrive via scalar prefetch
+(`PrefetchScalarGridSpec`), so the BlockSpec index map can address
+`bank[ids[a]]` before the body runs — the canonical dynamic-gather idiom.
+
+Padded cohort slots (valid=0) must point `ids` at a dedicated dummy row
+(the caller uses row index N of an (N+1)-row bank): the kernel writes the
+row's own old value back (a no-op, deterministic even when every pad slot
+aliases the same dummy row) and contributes zero to the delta sum.
+
+Blocks are (1, block_m): a single bank row per step, since gathered rows
+are not contiguous. On real TPUs a (1, 512) f32 tile is below the (8, 128)
+sublane optimum — acceptable for a DMA-bound gather (same trade the
+embedding-lookup kernels make).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
+
+
+def _kernel(ids_ref, valid_ref, u_ref, bank_ref, bank_out_ref, dsum_ref):
+    a = pl.program_id(1)
+    valid = valid_ref[a] > 0
+    old = bank_ref[...]                                   # (1, bm) bank dtype
+    u = u_ref[...]                                        # (1, bm) f32
+
+    @pl.when(a == 0)
+    def _init():
+        dsum_ref[...] = jnp.zeros_like(dsum_ref)
+
+    # delta uses the *stored* (dtype-cast) value, not the raw f32 update —
+    # keeps G_sum == Σ rows exact for bf16 banks (same as the jnp path)
+    u_st = u.astype(bank_ref.dtype)
+    dsum_ref[...] += jnp.where(
+        valid, u_st.astype(jnp.float32) - old.astype(jnp.float32), 0.0)
+    bank_out_ref[...] = jnp.where(valid, u_st, old)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _bank_scatter(bank, updates, ids, valid, *, block_m, interpret):
+    r, m = bank.shape
+    c = updates.shape[0]
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    assert updates.shape == (c, m), (updates.shape, (c, m))
+    assert ids.shape == valid.shape == (c,), (ids.shape, valid.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                            # ids, valid
+        grid=(m // bm, c),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda j, a, ids, valid: (a, j)),
+            pl.BlockSpec((1, bm), lambda j, a, ids, valid: (ids[a], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda j, a, ids, valid: (ids[a], j)),
+            pl.BlockSpec((1, bm), lambda j, a, ids, valid: (0, j)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, m), bank.dtype),
+                   jax.ShapeDtypeStruct((1, m), jnp.float32)],
+        input_output_aliases={3: 0},                      # bank updated in place
+        interpret=interpret,
+    )(ids, valid, updates, bank)
+
+
+def bank_scatter(bank: jnp.ndarray, updates: jnp.ndarray, ids: jnp.ndarray,
+                 valid: jnp.ndarray, *, block_m: int = 512,
+                 interpret: bool | None = None):
+    """bank (R, M); updates (C, M) f32; ids (C,) int32 < R; valid (C,) bool.
+
+    Returns (new_bank (R, M) [bank.dtype], delta_sum (M,) f32) where
+    delta_sum = Σ_{valid a} (updates[a] − bank[ids[a]]). Duplicate ids are
+    only allowed when at most one of them is valid (pad slots share the
+    dummy row). M must be a multiple of block_m (ops.py pads).
+    """
+    new_bank, dsum = _bank_scatter(
+        bank, updates.astype(jnp.float32), ids.astype(jnp.int32),
+        valid.astype(jnp.int32), block_m=block_m,
+        interpret=resolve_interpret(interpret))
+    return new_bank, dsum[0]

@@ -18,6 +18,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,10 +68,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(jax.jit,
                    static_argnames=("causal", "block_q", "block_k",
                                     "interpret"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
-    """q (B,S,H,hd); k,v (B,T,KV,hd) with H % KV == 0. Returns (B,S,H,hd)."""
+def _flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     causal: bool, block_q: int, block_k: int,
+                     interpret: bool) -> jnp.ndarray:
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     g = H // KV
@@ -101,3 +102,16 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q (B,S,H,hd); k,v (B,T,KV,hd) with H % KV == 0. Returns (B,S,H,hd).
+
+    interpret=None auto-detects: interpret on CPU, compiled otherwise.
+    """
+    return _flash_attention(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k,
+                            interpret=resolve_interpret(interpret))

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _kernel(active_ref, eta_ref, g_ref, u_ref, w_ref, g_out_ref, w_out_ref):
     act = active_ref[...] > 0.5                     # (N, 1)
@@ -30,14 +32,9 @@ def _kernel(active_ref, eta_ref, g_ref, u_ref, w_ref, g_out_ref, w_out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def mifa_aggregate(g_old: jnp.ndarray, updates: jnp.ndarray,
-                   active: jnp.ndarray, w: jnp.ndarray, eta,
-                   *, block_m: int = 512, interpret: bool = True):
-    """g_old,updates (N,M); active (N,); w (M,); eta scalar.
-
-    Returns (g_new (N,M) [g_old.dtype], w_new (M,) [w.dtype]).
-    M must be padded to a multiple of block_m by the caller (ops.py does).
-    """
+def _mifa_aggregate(g_old: jnp.ndarray, updates: jnp.ndarray,
+                    active: jnp.ndarray, w: jnp.ndarray, eta,
+                    *, block_m: int, interpret: bool):
     n, m = g_old.shape
     bm = min(block_m, m)
     assert m % bm == 0, (m, bm)
@@ -66,3 +63,16 @@ def mifa_aggregate(g_old: jnp.ndarray, updates: jnp.ndarray,
         ],
         interpret=interpret,
     )(act2, eta_arr, g_old, updates, w)
+
+
+def mifa_aggregate(g_old: jnp.ndarray, updates: jnp.ndarray,
+                   active: jnp.ndarray, w: jnp.ndarray, eta,
+                   *, block_m: int = 512, interpret: bool | None = None):
+    """g_old,updates (N,M); active (N,); w (M,); eta scalar.
+
+    Returns (g_new (N,M) [g_old.dtype], w_new (M,) [w.dtype]).
+    M must be padded to a multiple of block_m by the caller (ops.py does).
+    interpret=None auto-detects: interpret on CPU, compiled otherwise.
+    """
+    return _mifa_aggregate(g_old, updates, active, w, eta, block_m=block_m,
+                           interpret=resolve_interpret(interpret))

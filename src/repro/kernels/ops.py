@@ -2,12 +2,16 @@
 
 * `mifa_aggregate_tree` — applies the fused aggregation kernel across a whole
   parameter pytree (flatten each leaf's model dims, pad to the block size).
+* `bank_update_tree` — the fused cohort gather/delta/scatter over a memory-
+  bank pytree (DenseBank's Pallas path).
 * `attention` / `ssd` — drop-in replacements for the jnp paths in
-  repro.models; `use_pallas(True)` flips the model zoo onto the kernels
-  (interpret=True on CPU, compiled on real TPUs).
+  repro.models (callers opt in; `use_pallas(True/False/None)` only forces
+  compiled vs interpret for code that already routes through these wrappers).
 
-On this CPU container the kernels run in interpret mode — numerically exact but
-slow — so the model default stays on the jnp paths; tests sweep both.
+Interpret vs compiled is auto-detected per process (`kernels.backend`):
+interpret on CPU — numerically exact but slow — compiled Mosaic on real
+accelerators. Every wrapper takes `interpret=None` (auto) and resolves it
+*before* entering jit, so the cache is keyed on the resolved bool.
 """
 from __future__ import annotations
 
@@ -15,12 +19,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.backend import resolve_interpret, use_pallas  # noqa: F401
+from repro.kernels.bank_scatter import bank_scatter
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mifa_aggregate import mifa_aggregate
 from repro.kernels.ssd_scan import ssd_scan
-
-_INTERPRET = True  # no TPU in this container
 
 
 def _pad_to(x: jnp.ndarray, m: int, axis: int = -1):
@@ -33,14 +38,9 @@ def _pad_to(x: jnp.ndarray, m: int, axis: int = -1):
     return jnp.pad(x, widths), size
 
 
-@functools.partial(jax.jit, static_argnames=("block_m",))
-def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
-                        block_m: int = 512):
-    """Fused MIFA aggregation over a pytree.
-
-    g_tree / u_tree: leaves (N, *shape); params: leaves (*shape).
-    Returns (new_g_tree, new_params).
-    """
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
+                         block_m, interpret):
     def one(g, u, w):
         n = g.shape[0]
         g2, m = _pad_to(g.reshape(n, -1), block_m)
@@ -48,7 +48,7 @@ def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
         w2, _ = _pad_to(w.reshape(-1), block_m)
         gn, wn = mifa_aggregate(g2, u2, active, w2, eta,
                                 block_m=min(block_m, g2.shape[1]),
-                                interpret=_INTERPRET)
+                                interpret=interpret)
         return (gn[:, :m].reshape(g.shape), wn[:m].reshape(w.shape))
 
     out = jax.tree.map(one, g_tree, u_tree, params)
@@ -59,10 +59,73 @@ def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
     return g_new, p_new
 
 
-def attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
+                        block_m: int = 512, interpret: bool | None = None):
+    """Fused MIFA aggregation over a pytree.
+
+    g_tree / u_tree: leaves (N, *shape); params: leaves (*shape).
+    Returns (new_g_tree, new_params).
+    """
+    return _mifa_aggregate_tree(g_tree, u_tree, active, params, eta,
+                                block_m=block_m,
+                                interpret=resolve_interpret(interpret))
+
+
+# widest single-tile row the bank kernel takes before column-blocking kicks
+# in; (1, 8192) f32 is ~32 KB/buffer in VMEM, well under budget
+_BANK_SINGLE_BLOCK = 8192
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m, interpret):
+    def one(rows, u):
+        r, c = rows.shape[0], u.shape[0]
+        m_raw = int(np.prod(rows.shape[1:]))
+        if m_raw <= _BANK_SINGLE_BLOCK:
+            # one tile per row: no padding, no O(N·d) bank copy
+            rows2, m = rows.reshape(r, -1), m_raw
+            u2 = u.reshape(c, -1)
+            bm = m_raw
+        else:
+            # wide leaves get column-blocked; padding copies the bank, so
+            # production models should keep flattened widths divisible by
+            # block_m (true for power-of-two dims) to stay zero-copy
+            rows2, m = _pad_to(rows.reshape(r, -1), block_m)
+            u2, _ = _pad_to(u.reshape(c, -1), block_m)
+            bm = min(block_m, rows2.shape[1])
+        rn, ds = bank_scatter(rows2, u2, ids, valid, block_m=bm,
+                              interpret=interpret)
+        return (rn[:, :m].reshape(rows.shape),
+                ds[:m].reshape(rows.shape[1:]))
+
+    out = jax.tree.map(one, rows_tree, upd_tree)
+    rows_new = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda o: isinstance(o, tuple))
+    dsum = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda o: isinstance(o, tuple))
+    return rows_new, dsum
+
+
+def bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m: int = 512,
+                     interpret: bool | None = None):
+    """Fused cohort bank update over a pytree.
+
+    rows_tree: leaves (R, *shape); upd_tree: leaves (C, *shape) f32;
+    ids (C,) int32 rows to update (pad slots -> dummy row); valid (C,) bool.
+    Returns (new_rows_tree, delta_sum_tree with leaves (*shape,) f32).
+    """
+    return _bank_update_tree(rows_tree, upd_tree, ids, valid,
+                             block_m=block_m,
+                             interpret=resolve_interpret(interpret))
+
+
+def attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+              interpret: bool | None = None):
     return flash_attention(q, k, v, causal=causal, block_q=block_q,
-                           block_k=block_k, interpret=_INTERPRET)
+                           block_k=block_k,
+                           interpret=resolve_interpret(interpret))
 
 
-def ssd(x, dA, B, C, *, chunk=256):
-    return ssd_scan(x, dA, B, C, chunk=chunk, interpret=_INTERPRET)
+def ssd(x, dA, B, C, *, chunk=256, interpret: bool | None = None):
+    return ssd_scan(x, dA, B, C, chunk=chunk,
+                    interpret=resolve_interpret(interpret))

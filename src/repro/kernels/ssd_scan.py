@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, h_out_ref, h_scr, *,
             nc: int, q: int):
@@ -64,10 +66,8 @@ def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, h_out_ref, h_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
-             *, chunk: int = 256, interpret: bool = True):
-    """x (b,S,h,p); dA (b,S,h); B,C (b,S,n). Returns (y (b,S,h,p), h_final
-    (b,h,p,n) f32). S must be divisible by the chunk size."""
+def _ssd_scan(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+              *, chunk: int, interpret: bool):
     b, S, H, P = x.shape
     N = B.shape[-1]
     q = min(chunk, S)
@@ -96,3 +96,14 @@ def ssd_scan(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
         interpret=interpret,
     )(x, dA, B, C)
     return y, h_final
+
+
+def ssd_scan(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+             *, chunk: int = 256, interpret: bool | None = None):
+    """x (b,S,h,p); dA (b,S,h); B,C (b,S,n). Returns (y (b,S,h,p), h_final
+    (b,h,p,n) f32). S must be divisible by the chunk size.
+
+    interpret=None auto-detects: interpret on CPU, compiled otherwise.
+    """
+    return _ssd_scan(x, dA, B, C, chunk=chunk,
+                     interpret=resolve_interpret(interpret))

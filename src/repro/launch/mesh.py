@@ -54,6 +54,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes, devices=devices)
 
 
+def data_parallel_size(mesh) -> int:
+    """Total extent of the client/data axes ('pod' x 'data' on multi-pod) —
+    the shard count for MemoryBank rows and the MIFA update array. Delegates
+    to sharding.rules so mesh helpers and partition rules can't diverge."""
+    from repro.sharding.rules import data_axis_size
+    return data_axis_size(mesh)
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())

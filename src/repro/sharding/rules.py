@@ -196,6 +196,30 @@ def client_state_specs(params: Any, cfg: ArchConfig, mesh,
     return jax.tree_util.tree_map_with_path(fn, params)
 
 
+def data_axis_size(mesh) -> int:
+    """Total extent of the client/data axes — the shard count for MemoryBank
+    rows and the MIFA update array."""
+    d = 1
+    for a in data_axes(mesh):
+        d *= mesh.shape[a]
+    return d
+
+
+def padded_bank_rows(n_clients: int, mesh) -> int:
+    """Row count for a sharded MemoryBank: N real rows + the dummy pad row,
+    rounded up so the client axis divides the mesh's data extent (otherwise
+    `sanitize` would silently replicate the whole bank)."""
+    d = data_axis_size(mesh)
+    return -((n_clients + 1) // -d) * d
+
+
+def bank_row_specs(params: Any, cfg: ArchConfig, mesh, n_rows: int) -> Any:
+    """Specs for MemoryBank rows: leaves (n_rows, *param_shape), the client
+    axis sharded over data (and pod) — the same layout as the dense MIFA
+    update array, so the cohort gather/scatter is a local row exchange."""
+    return client_state_specs(params, cfg, mesh, n_clients=n_rows)
+
+
 def cache_specs(cache: Any, cfg: ArchConfig, mesh, batch_size: int) -> Any:
     """KV/SSM cache specs.
 

@@ -115,3 +115,28 @@ def test_client_update_is_grad_sum(seed, k):
         w = w - eta * g
     manual = (np.asarray(params["w"], np.float64) - w) / eta
     np.testing.assert_allclose(np.asarray(G["w"]), manual, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(1, 6))
+def test_bank_cohort_rounds_match_dense_mifa_property(seed, n, rounds):
+    """fp32 MemoryBank cohort rounds == dense MIFA('array') for random
+    trees, cohorts, and round counts (the bank acceptance property)."""
+    from repro.bank import DenseBank
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (3,))}
+    mifa = MIFA(memory="array")
+    sm = mifa.init_state(params, n)
+    bank = DenseBank()
+    bs = bank.init(params, n)
+    pm = params
+    for t in range(rounds):
+        key, k1, k2 = jax.random.split(key, 3)
+        u = {"w": jax.random.normal(k1, (n, 3))}
+        active = np.array(jax.random.bernoulli(k2, 0.5, (n,)))
+        sm, pm, _ = mifa.round_step(sm, pm, u, jnp.zeros(n),
+                                    jnp.asarray(active), jnp.float32(0.1))
+        ids = np.flatnonzero(active)
+        bs = bank.scatter(bs, ids, {"w": u["w"][ids]})
+    np.testing.assert_allclose(
+        np.asarray(bank.mean_g(bs)["w"]),
+        np.asarray(jnp.mean(sm["G"]["w"], 0)), rtol=1e-5, atol=1e-6)

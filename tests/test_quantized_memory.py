@@ -1,0 +1,79 @@
+"""core.quantized_memory: round-trip bounds, unbiasedness, edge cases.
+
+The int8 memory (dense MIFA and Int8PagedBank both reuse it) rests on two
+facts: the reconstruction error is bounded by one quantum per element, and
+stochastic rounding makes the stored value an unbiased estimator — the
+property MIFA's analysis needs (DESIGN.md §3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantized_memory import (dequantize_leaf, dequantize_tree,
+                                         quantize_leaf, quantize_tree)
+
+
+def test_roundtrip_error_bounded_by_one_quantum():
+    key = jax.random.PRNGKey(0)
+    for i, scale in enumerate((1e-4, 1.0, 37.0)):
+        x = jax.random.normal(jax.random.fold_in(key, i), (5, 32)) * scale
+        q, s = quantize_leaf(jax.random.fold_in(key, 100 + i), x)
+        got = np.asarray(dequantize_leaf(q, s))
+        quantum = np.asarray(s)[:, None]                  # absmax/127 per row
+        assert np.all(np.abs(got - np.asarray(x)) <= quantum + 1e-12)
+
+
+def test_stochastic_rounding_unbiased_mean_over_rngs():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (2, 24)) * 0.5
+    reps = 400
+    acc = np.zeros_like(np.asarray(x))
+    for i in range(reps):
+        q, s = quantize_leaf(jax.random.fold_in(key, i), x)
+        acc += np.asarray(dequantize_leaf(q, s))
+    quantum = float(jnp.max(jnp.abs(x))) / 127.0
+    np.testing.assert_allclose(acc / reps, np.asarray(x),
+                               atol=4 * quantum / np.sqrt(reps) + 1e-7)
+
+
+def test_zero_rows_quantize_to_exact_zero():
+    x = jnp.zeros((3, 16))
+    q, s = quantize_leaf(jax.random.PRNGKey(0), x)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    assert np.all(np.asarray(s) > 0)                      # 1e-12 floor, no /0
+    np.testing.assert_array_equal(np.asarray(dequantize_leaf(q, s)), 0.0)
+
+
+def test_absmax_elements_are_exact_and_clipped():
+    """±absmax hits ±127 with zero fractional part — reproduced exactly."""
+    x = jnp.array([[3.0, -3.0, 1.5, 0.0]])
+    q, s = quantize_leaf(jax.random.PRNGKey(1), x)
+    q = np.asarray(q)
+    assert q[0, 0] == 127 and q[0, 1] == -127
+    assert np.abs(q).max() <= 127
+    got = np.asarray(dequantize_leaf(jnp.asarray(q), s))
+    np.testing.assert_allclose(got[0, 0], 3.0, rtol=1e-6)
+    np.testing.assert_allclose(got[0, 1], -3.0, rtol=1e-6)
+
+
+def test_per_row_scales_are_independent():
+    x = jnp.stack([jnp.full((8,), 1000.0), jnp.full((8,), 1e-3)])
+    q, s = quantize_leaf(jax.random.PRNGKey(2), x)
+    got = np.asarray(dequantize_leaf(q, s))
+    # the tiny row must not be flattened by the huge row's scale
+    np.testing.assert_allclose(got[1], 1e-3, rtol=1e-2)
+    np.testing.assert_allclose(got[0], 1000.0, rtol=1e-2)
+
+
+def test_tree_roundtrip_matches_leafwise():
+    key = jax.random.PRNGKey(3)
+    tree = {"w": jax.random.normal(key, (4, 3, 2)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (4, 5))}
+    qt, st = quantize_tree(key, tree)
+    back = dequantize_tree(qt, st)
+    for leaf, orig in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        n = orig.shape[0]
+        quantum = np.abs(np.asarray(orig).reshape(n, -1)).max(1) / 127.0
+        err = np.abs(np.asarray(leaf) - np.asarray(orig)).reshape(n, -1)
+        assert np.all(err <= quantum[:, None] + 1e-12)
+    assert all(leaf.dtype == jnp.int8 for leaf in jax.tree.leaves(qt))
