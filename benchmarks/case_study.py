@@ -3,6 +3,13 @@
 MIFA's round complexity scales with avg(1/p_i); sampling-based FedAvg pays
 1/p_min through cohort waiting. We sweep p_min and measure the first round at
 which the evaluation loss crosses a threshold ε.
+
+The p_min sweep is a fleet: MIFA and device-sampling FedAvg run ALL p_min
+points as one vmapped program each (one trial per availability point —
+participation is host-side environment, so any availability parameter
+batches freely). FedAvg-IS bakes the probabilities into its *static* config
+(a hashable tuple), so it cannot batch across p_min and loops sequentially —
+the one-spec-per-point case `repro.fleet.spec.expand_grid` documents.
 """
 from __future__ import annotations
 
@@ -11,19 +18,16 @@ import time
 import numpy as np
 from common import emit, paper_problem, save_artifact
 
-from repro.core import MIFA, FedAvgIS, FedAvgSampling, run_fl
+from repro.core import (MIFA, BernoulliParticipation, FedAvgIS,
+                        FedAvgSampling, label_correlated_probs, run_fl)
+from repro.fleet import Trial, make_fleet_eval, run_fleet
 from repro.optim import inv_t
 
 
-def rounds_to_eps(model, batcher, algo, part, eval_fn, *, eps: float,
-                  max_rounds: int, clock: bool) -> int:
-    _, hist = run_fl(model=model, algo=algo, participation=part,
-                     batcher=batcher, schedule=inv_t(1.0),
-                     n_rounds=max_rounds, weight_decay=1e-3, seed=0,
-                     eval_fn=eval_fn, eval_every=5, uses_update_clock=clock)
-    for t, loss in hist.eval_loss:
+def _first_crossing(eval_rounds, losses, eps: float, max_rounds: int) -> int:
+    for t, loss in zip(eval_rounds, losses):
         if loss <= eps:
-            return t
+            return int(t)
     return max_rounds  # censored
 
 
@@ -32,27 +36,64 @@ def main(fast: bool = False) -> None:
     max_rounds = 150 if fast else 300
     n_clients = 30 if fast else 40
     p_mins = (0.05, 0.1, 0.2, 0.4) if not fast else (0.1, 0.3)
+
+    model, batcher, _, _, eval_fn = paper_problem(
+        "paper_logistic", n_clients=n_clients, p_min=p_mins[0])
+    labels = eval_fn.client_labels
+    fleet_eval = make_fleet_eval(model, eval_fn.eval_batch)
+    probs_for = {pm: label_correlated_probs(labels, pm) for pm in p_mins}
+
+    def trials_for():
+        return [Trial(seed=0,
+                      participation=BernoulliParticipation(probs_for[pm],
+                                                           seed=7),
+                      label=f"pmin{pm}") for pm in p_mins]
+
+    kw = dict(model=model, batcher=batcher, schedule=inv_t(1.0),
+              n_rounds=max_rounds, weight_decay=1e-3, eval_fn=fleet_eval,
+              eval_every=5)
+    t0 = time.time()
+    _, h_mifa = run_fleet(algo=MIFA(memory="array"), trials=trials_for(),
+                          **kw)
+    t1 = time.time()
+    _, h_samp = run_fleet(algo=FedAvgSampling(s=n_clients // 3),
+                          trials=trials_for(), uses_update_clock=True, **kw)
+    t2 = time.time()
+    # FedAvg-IS: static per-point probs => sequential, one run per p_min
+    h_is, wall_is = {}, {}
+    for pm in p_mins:
+        ti = time.time()
+        _, h = run_fl(model=model, batcher=batcher, schedule=inv_t(1.0),
+                      n_rounds=max_rounds, weight_decay=1e-3, seed=0,
+                      algo=FedAvgIS(tuple(probs_for[pm].tolist())),
+                      participation=BernoulliParticipation(probs_for[pm],
+                                                           seed=7),
+                      eval_fn=lambda p: eval_fn(p), eval_every=5)
+        h_is[pm] = h
+        wall_is[pm] = time.time() - ti
+    # per-point attributable cost: the two fleet sweeps amortise over all
+    # p_min points, the sequential IS run is that point's own wall clock
+    wall_fleet_per_point = (t2 - t0) / len(p_mins)
+
+    stacked = {"mifa": h_mifa.stacked(), "sampling": h_samp.stacked()}
     rows = []
-    for p_min in p_mins:
-        model, batcher, probs, make_part, eval_fn = paper_problem(
-            "paper_logistic", n_clients=n_clients, p_min=p_min)
-        inv_avg = float(np.mean(1.0 / probs))
-        inv_min = float(1.0 / probs.min())
-        t0 = time.time()
-        r_mifa = rounds_to_eps(model, batcher, MIFA(memory="array"),
-                               make_part(7), eval_fn, eps=eps,
-                               max_rounds=max_rounds, clock=False)
-        r_samp = rounds_to_eps(model, batcher, FedAvgSampling(s=n_clients // 3),
-                               make_part(7), eval_fn, eps=eps,
-                               max_rounds=max_rounds, clock=True)
-        r_is = rounds_to_eps(model, batcher, FedAvgIS(tuple(probs.tolist())),
-                             make_part(7), eval_fn, eps=eps,
-                             max_rounds=max_rounds, clock=False)
-        wall = time.time() - t0
-        rows.append({"p_min": p_min, "avg_inv_p": inv_avg,
+    for j, pm in enumerate(p_mins):
+        inv_avg = float(np.mean(1.0 / probs_for[pm]))
+        inv_min = float(1.0 / probs_for[pm].min())
+        r_mifa = _first_crossing(stacked["mifa"]["eval_rounds"],
+                                 stacked["mifa"]["eval_loss"][j], eps,
+                                 max_rounds)
+        r_samp = _first_crossing(stacked["sampling"]["eval_rounds"],
+                                 stacked["sampling"]["eval_loss"][j], eps,
+                                 max_rounds)
+        r_is = _first_crossing([t for t, _ in h_is[pm].eval_loss],
+                               [v for _, v in h_is[pm].eval_loss], eps,
+                               max_rounds)
+        rows.append({"p_min": pm, "avg_inv_p": inv_avg,
                      "inv_p_min": inv_min, "mifa": r_mifa,
                      "sampling": r_samp, "is": r_is})
-        emit(f"case_study/pmin{p_min}", wall * 1e6 / 3,
+        emit(f"case_study/pmin{pm}",
+             (wall_fleet_per_point + wall_is[pm]) * 1e6 / 3,
              f"mifa={r_mifa};sampling={r_samp};is={r_is};"
              f"avg_inv_p={inv_avg:.2f};inv_pmin={inv_min:.1f}")
     save_artifact("case_study", {"eps": eps, "rows": rows})

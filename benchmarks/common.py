@@ -44,6 +44,12 @@ def paper_problem(model_name: str = "paper_logistic", *, n_clients: int = 100,
         loss, _ = model.loss_fn(params, batch)
         return float(loss), float(model.accuracy(params, batch))
 
+    # the raw test set and client labels, so fleet benchmarks can build a
+    # vmapped eval (repro.fleet.make_fleet_eval) and sweep availability
+    # parameters (label_correlated_probs) over the same problem instance
+    eval_fn.eval_batch = {"x": Xte, "y": yte}
+    eval_fn.client_labels = labels
+
     participation = lambda s: BernoulliParticipation(probs, seed=s)
     return model, batcher, probs, participation, eval_fn
 

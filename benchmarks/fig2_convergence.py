@@ -5,6 +5,12 @@ with label-correlated Bernoulli availability, p_min in {0.1, 0.2}.
 Strongly convex run = logistic model (paper: MNIST/logistic);
 non-convex run = 2-layer MLP (paper: CIFAR-10/LeNet-5). Synthetic stand-ins —
 see DESIGN.md §6 for why and what transfers.
+
+Each algorithm's seed sweep runs through the vmapped fleet executor
+(`repro.fleet`) as ONE program instead of a Python loop over `run_fl` —
+per-trial results are bit-exact either way (tests/test_fleet.py), the fleet
+is just ~5-6x faster end-to-end (benchmarks/artifacts/fleet_scale.md), so
+the same budget buys more seeds/scenarios.
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ import time
 
 from common import emit, paper_problem, save_artifact
 
-from repro.core import MIFA, BiasedFedAvg, FedAvgIS, FedAvgSampling, run_fl
+from repro.core import MIFA, BiasedFedAvg, FedAvgIS, FedAvgSampling
+from repro.fleet import Trial, make_fleet_eval, run_fleet
 from repro.optim import inv_t
 
 
@@ -22,6 +29,7 @@ def run(model_name: str, p_min: float, *, n_rounds: int, n_clients: int,
                  "algorithms": {}}
     model, batcher, probs, make_part, eval_fn = paper_problem(
         model_name, n_clients=n_clients, p_min=p_min)
+    fleet_eval = make_fleet_eval(model, eval_fn.eval_batch)
     algos = {
         "mifa": MIFA(memory="array"),
         "biased_fedavg": BiasedFedAvg(),
@@ -30,24 +38,23 @@ def run(model_name: str, p_min: float, *, n_rounds: int, n_clients: int,
         "fedavg_is": FedAvgIS(tuple(probs.tolist())),
     }
     for name, algo in algos.items():
-        losses, accs, curves = [], [], []
+        trials = [Trial(seed=s, participation=make_part(s + 100),
+                        label=f"{name}/seed{s}") for s in seeds]
         t0 = time.time()
-        for seed in seeds:
-            _, hist = run_fl(
-                model=model, algo=algo, participation=make_part(seed + 100),
-                batcher=batcher, schedule=inv_t(1.0), n_rounds=n_rounds,
-                weight_decay=1e-3, seed=seed, eval_fn=eval_fn,
-                eval_every=max(n_rounds // 10, 1),
-                uses_update_clock=name.startswith("fedavg_s"))
-            losses.append(hist.eval_loss[-1][1])
-            accs.append(hist.eval_acc[-1][1])
-            curves.append(hist.train_loss)
+        _, hist = run_fleet(
+            model=model, algo=algo, batcher=batcher, schedule=inv_t(1.0),
+            n_rounds=n_rounds, weight_decay=1e-3, trials=trials,
+            eval_fn=fleet_eval, eval_every=max(n_rounds // 10, 1),
+            uses_update_clock=name.startswith("fedavg_s"))
         wall = time.time() - t0
+        losses = [float(v) for v in hist.eval_loss[-1][1]]
+        accs = [float(v) for v in hist.eval_acc[-1][1]]
+        curve0 = hist.trial(0).train_loss
         out["algorithms"][name] = {
             "final_eval_loss_mean": sum(losses) / len(losses),
             "final_eval_acc_mean": sum(accs) / len(accs),
             "final_eval_loss_all": losses,
-            "train_curve_seed0": curves[0][:: max(n_rounds // 100, 1)],
+            "train_curve_seed0": curve0[:: max(n_rounds // 100, 1)],
             "wall_s": wall,
         }
         emit(f"fig2/{model_name}/pmin{p_min}/{name}",
@@ -58,18 +65,18 @@ def run(model_name: str, p_min: float, *, n_rounds: int, n_clients: int,
 
 
 def main(fast: bool = False) -> None:
-    # default sized to finish on a CPU container; the paper-scale run
-    # (clients=100, rounds=200, seeds=3) is fig2_full below
+    # fleet-sized sweep: the vmapped executor makes 2-3 seeds per algorithm
+    # affordable where the old sequential loop ran 1-2
     rounds = 120 if fast else 160
     clients = 30 if fast else 60
-    seeds = (0,) if fast else (0, 1)
+    seeds = (0,) if fast else (0, 1, 2)
     results = []
     for p_min in (0.1, 0.2):
         results.append(run("paper_logistic", p_min, n_rounds=rounds,
                            n_clients=clients, seeds=seeds))
     # non-convex run (smaller round budget — MLP is slower)
     results.append(run("paper_mlp", 0.1, n_rounds=rounds // 2,
-                       n_clients=clients, seeds=seeds[:1]))
+                       n_clients=clients, seeds=seeds[:2]))
     save_artifact("fig2_convergence", {"results": results})
 
 

@@ -13,6 +13,8 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
                      straggler-bound round policies (repro.sim)
   bank_scale       : memory-bank cohort rounds flat in N up to 10⁶ clients
                      (repro.bank), vs the O(N·d) dense round
+  fleet_scale      : vmapped K-trial sweep (repro.fleet) vs the sequential
+                     run_fl loop — same trials, one program
 """
 from __future__ import annotations
 
@@ -36,6 +38,7 @@ def main() -> None:
     import bank_scale
     import case_study
     import fig2_convergence
+    import fleet_scale
     import roofline_bench
     import tau_stats
     import time_to_accuracy
@@ -49,6 +52,7 @@ def main() -> None:
         "roofline_bench": roofline_bench,
         "time_to_accuracy": time_to_accuracy,
         "bank_scale": bank_scale,
+        "fleet_scale": fleet_scale,
     }
     print("name,us_per_call,derived")
     failed = []

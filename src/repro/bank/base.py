@@ -44,6 +44,12 @@ class MemoryBank:
 
     `init` must be called exactly once per training run — backends are cheap
     config holders until then and remember `n_clients` afterwards.
+
+    `scatter` is a template method: it enforces the duplicate-id invariant
+    (`check_unique_ids`) for EVERY backend at a single point, then delegates
+    to the backend's `_scatter_rows`. Backends must not re-implement
+    `scatter` — that is how the host/int8 paths once drifted out from under
+    the check the dense path had.
     """
 
     #: True when `scatter` consumes/produces jnp pytrees and may run under jit.
@@ -65,6 +71,12 @@ class MemoryBank:
         valid (C,) bool (None => all valid); rng only for quantizing backends.
         Returns the new state (the old one must not be reused).
         """
+        check_unique_ids(ids, valid)
+        return self._scatter_rows(state, ids, updates, valid=valid, rng=rng)
+
+    def _scatter_rows(self, state: dict, ids, updates, *, valid,
+                      rng) -> dict:
+        """Backend scatter body; `scatter` has already validated the ids."""
         raise NotImplementedError
 
     def mean_g(self, state: dict) -> Any:
@@ -74,6 +86,36 @@ class MemoryBank:
     def memory_bytes(self, state: dict) -> dict:
         """{'device': bytes, 'host': bytes} currently held by the bank."""
         raise NotImplementedError
+
+    # ------------------------------------------------------------------ #
+    # fleet (leading trial axis) — jittable backends only
+    # ------------------------------------------------------------------ #
+
+    def _require_fleet(self) -> None:
+        if not self.jittable:
+            raise NotImplementedError(
+                f"{type(self).__name__} is host-offloaded and excluded from "
+                "the vmapped fleet path (DESIGN.md §7); use DenseBank or run "
+                "trials sequentially")
+
+    def gather_fleet(self, state: dict, ids) -> Any:
+        """Batched gather over stacked trial state: leaves (K, N+1, ...),
+        ids (K, C) -> rows (K, C, ...). Gather has no rng, so the vmapped
+        per-trial gather is the correct default for any jittable backend."""
+        self._require_fleet()
+        import jax
+        return jax.vmap(self.gather)(state, ids)
+
+    def scatter_fleet(self, state: dict, ids, updates, *, valid=None,
+                      rng=None) -> dict:
+        """Batched scatter over stacked trial state: ids/valid (K, C),
+        update leaves (K, C, ...). Jittable backends must override — rng
+        threading is backend-specific (a quantizing backend must give each
+        trial its OWN stream, never one shared key) — see DenseBank."""
+        self._require_fleet()
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the batched fleet "
+            "scatter")
 
 
 def broadcast_valid(valid: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:

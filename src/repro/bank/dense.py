@@ -23,18 +23,14 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.bank.base import MemoryBank, broadcast_valid, check_unique_ids
 
 
-@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
-def _scatter(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
-    if use_pallas:
-        from repro.kernels.ops import bank_update_tree
-        rows_new, dsum = bank_update_tree(rows, updates, ids, valid)
-        g_sum = jax.tree.map(jnp.add, g_sum, dsum)
-        return rows_new, g_sum
-
+def _scatter_jnp(rows, g_sum, ids, valid, updates):
+    """The jnp gather/delta/scatter body — pure, so the fleet executor can
+    vmap it over a leading trial axis (the SAME code as the per-trial path)."""
     def one(r, u, gs):
         old = r[ids]                                   # (C, ...) r.dtype
         u_st = u.astype(r.dtype)
@@ -50,6 +46,32 @@ def _scatter(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
     g_new = jax.tree.map(lambda o: o[1], out,
                          is_leaf=lambda o: isinstance(o, tuple))
     return rows_new, g_new
+
+
+@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
+def _scatter(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.ops import bank_update_tree
+        rows_new, dsum = bank_update_tree(rows, updates, ids, valid)
+        g_sum = jax.tree.map(jnp.add, g_sum, dsum)
+        return rows_new, g_sum
+    return _scatter_jnp(rows, g_sum, ids, valid, updates)
+
+
+@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
+def _scatter_fleet(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+    """Batched (K-trial) scatter: rows (K, R, ...), ids/valid (K, C).
+
+    use_pallas routes to the grid-axis batched kernel
+    (`kernels.bank_scatter_batched`); otherwise the per-trial jnp body is
+    vmapped — bit-identical per trial to the sequential `_scatter`.
+    """
+    if use_pallas:
+        from repro.kernels.ops import fleet_bank_update_tree
+        rows_new, dsum = fleet_bank_update_tree(rows, updates, ids, valid)
+        g_sum = jax.tree.map(jnp.add, g_sum, dsum)
+        return rows_new, g_sum
+    return jax.vmap(_scatter_jnp)(rows, g_sum, ids, valid, updates)
 
 
 class DenseBank(MemoryBank):
@@ -99,14 +121,34 @@ class DenseBank(MemoryBank):
         return jax.tree.map(lambda r: r[ids].astype(jnp.float32),
                             state["rows"])
 
-    def scatter(self, state: dict, ids, updates, *, valid=None,
-                rng=None) -> dict:
-        check_unique_ids(ids, valid)
+    def _scatter_rows(self, state: dict, ids, updates, *, valid,
+                      rng=None) -> dict:
         ids = jnp.asarray(ids, jnp.int32)
         valid = (jnp.ones(ids.shape, bool) if valid is None
                  else jnp.asarray(valid, bool))
         rows, g_sum = _scatter(state["rows"], state["g_sum"], ids, valid,
                                updates, use_pallas=self._pallas())
+        return {"rows": rows, "g_sum": g_sum}
+
+    def scatter_fleet(self, state: dict, ids, updates, *, valid=None,
+                      rng=None) -> dict:
+        """Stacked-trial scatter: state leaves (K, R, ...), ids/valid (K, C).
+
+        The Pallas path runs the batched kernel (trial axis = outermost grid
+        dim); the jnp path vmaps the identical per-trial body."""
+        import jax.core
+        if not isinstance(ids, jax.core.Tracer):
+            ids_np = np.asarray(ids)
+            valid_np = None if valid is None else np.asarray(valid)
+            for k in range(ids_np.shape[0]):
+                check_unique_ids(ids_np[k],
+                                 None if valid_np is None else valid_np[k])
+        ids = jnp.asarray(ids, jnp.int32)
+        valid = (jnp.ones(ids.shape, bool) if valid is None
+                 else jnp.asarray(valid, bool))
+        rows, g_sum = _scatter_fleet(state["rows"], state["g_sum"], ids,
+                                     valid, updates,
+                                     use_pallas=self._pallas())
         return {"rows": rows, "g_sum": g_sum}
 
     def mean_g(self, state: dict):

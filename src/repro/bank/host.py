@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank.base import MemoryBank, check_unique_ids
+from repro.bank.base import MemoryBank
 
 
 class HostBank(MemoryBank):
@@ -39,9 +39,8 @@ class HostBank(MemoryBank):
         ids = np.asarray(ids, np.int64)
         return jax.tree.map(lambda r: jnp.asarray(r[ids]), state["rows"])
 
-    def scatter(self, state: dict, ids, updates, *, valid=None,
-                rng=None) -> dict:
-        check_unique_ids(ids, valid)
+    def _scatter_rows(self, state: dict, ids, updates, *, valid=None,
+                      rng=None) -> dict:
         ids = np.asarray(ids, np.int64)
         if valid is None:
             keep = np.ones(ids.shape, bool)

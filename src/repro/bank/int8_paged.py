@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank.base import MemoryBank, check_unique_ids
+from repro.bank.base import MemoryBank
 from repro.core import quantized_memory as qm
 
 
@@ -67,10 +67,9 @@ class Int8PagedBank(MemoryBank):
                   for li in range(len(state["shapes"]))]
         return jax.tree.unflatten(state["treedef"], leaves)
 
-    def scatter(self, state: dict, ids, updates, *, valid=None,
-                rng=None) -> dict:
+    def _scatter_rows(self, state: dict, ids, updates, *, valid=None,
+                      rng=None) -> dict:
         assert rng is not None, "int8 bank needs an rng for rounding"
-        check_unique_ids(ids, valid)
         ids = np.asarray(ids, np.int64)
         keep = (np.ones(ids.shape, bool) if valid is None
                 else np.asarray(valid, bool))

@@ -29,7 +29,8 @@ class BankedMIFA:
         self.bank = bank
 
     def init_state(self, params, n_clients: int) -> dict:
-        return {"bank": self.bank.init(params, n_clients), "t": 0}
+        return {"bank": self.bank.init(params, n_clients),
+                "t": jnp.zeros((), jnp.int32)}
 
     def round_step_cohort(self, state: dict, ids, valid, updates, losses,
                           rng=None):
@@ -41,4 +42,21 @@ class BankedMIFA:
         v = jnp.asarray(valid, jnp.float32)
         loss = jnp.sum(jnp.asarray(losses) * v) / jnp.maximum(jnp.sum(v), 1.0)
         metrics = {"loss": loss, "n_active": jnp.sum(v)}
+        return ({"bank": bank_state, "t": state["t"] + 1}, mean_g, metrics)
+
+    def round_step_cohort_fleet(self, state: dict, ids, valid, updates,
+                                losses, rng=None):
+        """Stacked-trial cohort round: ids/valid (K, C), update leaves
+        (K, C, ...), losses (K, C). Same math as `round_step_cohort` per
+        trial — the bank applies all K scatters in one batched call
+        (vmapped jnp or the grid-axis Pallas kernel) and the loss/metric
+        reductions run along axis 1. Returns (new_state, mean_G (K, ...),
+        metrics with (K,) leaves). Jittable banks only."""
+        bank_state = self.bank.scatter_fleet(state["bank"], ids, updates,
+                                             valid=valid, rng=rng)
+        mean_g = self.bank.mean_g(bank_state)     # elementwise: (K, ...) ok
+        v = jnp.asarray(valid, jnp.float32)
+        loss = (jnp.sum(jnp.asarray(losses) * v, axis=1)
+                / jnp.maximum(jnp.sum(v, axis=1), 1.0))
+        metrics = {"loss": loss, "n_active": jnp.sum(v, axis=1)}
         return ({"bank": bank_state, "t": state["t"] + 1}, mean_g, metrics)

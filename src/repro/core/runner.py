@@ -82,6 +82,65 @@ def _pow2_bucket(c: int) -> int:
     return 1 << max(int(np.ceil(np.log2(max(c, 1)))), 0)
 
 
+# --------------------------------------------------------------------------- #
+# pure round functions, shared by RoundRunner (jit) and repro.fleet (jit∘vmap)
+# --------------------------------------------------------------------------- #
+
+def make_dense_round_fn(model, algo, k_steps: int, weight_decay: float):
+    """One dense federated round as a pure function.
+
+    (state, params, batch, active, eta_loc, eta_srv, rng) ->
+    (state, params, metrics). RoundRunner jits it; the fleet executor vmaps
+    it over a leading trial axis — the SAME function, so the two paths can
+    never drift apart.
+    """
+    def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
+        updates, losses = client_updates(model.loss_fn, params, batch,
+                                         eta_loc, K=k_steps,
+                                         weight_decay=weight_decay)
+        return algo.round_step(state, params, updates, losses, active,
+                               eta_srv, rng)
+    return round_fn
+
+
+def make_cohort_update_fn(model, k_steps: int, weight_decay: float):
+    """Compact cohort local updates: (params, batch (C, ...), eta_loc) ->
+    (updates (C, ...), losses (C,)). Pure; shared with the fleet executor."""
+    def cohort_updates_fn(params, batch, eta_loc):
+        return client_updates(model.loss_fn, params, batch, eta_loc,
+                              K=k_steps, weight_decay=weight_decay)
+    return cohort_updates_fn
+
+
+def apply_mean(params, mean_g, eta_srv):
+    """Server step w <- w - η·mean_G (pure; shared with the fleet executor)."""
+    return jax.tree.map(
+        lambda w, g: (w - eta_srv * g).astype(w.dtype), params, mean_g)
+
+
+def make_cohort_round_fn(model, algo, k_steps: int, weight_decay: float):
+    """One whole cohort round (local updates + bank scatter + server step)
+    as a pure function — jittable banks only.
+
+    RoundRunner jits it; the fleet executor runs the structurally identical
+    batched composition. Keeping BOTH paths single fused programs is what
+    makes them bit-identical per trial: XLA's fp32 fusion decisions depend
+    on jit boundaries, so the sequential path must not split the round into
+    separate dispatches the vmapped path fuses.
+    """
+    updates_fn = make_cohort_update_fn(model, k_steps, weight_decay)
+
+    def cohort_round(state, params, batch, padded, valid, eta_loc, eta_srv,
+                     rng):
+        updates, losses = updates_fn(params, batch, eta_loc)
+        state, mean_g, metrics = algo.round_step_cohort(
+            state, padded, valid, updates, losses, rng=rng)
+        params = apply_mean(params, mean_g, eta_srv)
+        return state, params, metrics
+
+    return cohort_round
+
+
 class RoundRunner:
     """One jitted federated round + bookkeeping, shared across drivers.
 
@@ -124,31 +183,23 @@ class RoundRunner:
         self.cohort_mode = getattr(algo, "cohort_based", False)
 
         if self.cohort_mode:
-            @jax.jit
-            def cohort_updates_fn(params, batch, eta_loc):
-                return client_updates(model.loss_fn, params, batch, eta_loc,
-                                      K=batcher.k_steps,
-                                      weight_decay=weight_decay)
-
-            @jax.jit
-            def apply_mean_fn(params, mean_g, eta_srv):
-                return jax.tree.map(
-                    lambda w, g: (w - eta_srv * g).astype(w.dtype),
-                    params, mean_g)
-
-            self.cohort_updates_fn = cohort_updates_fn
-            self.apply_mean_fn = apply_mean_fn
+            self.cohort_updates_fn = jax.jit(make_cohort_update_fn(
+                model, batcher.k_steps, weight_decay))
+            self.apply_mean_fn = jax.jit(apply_mean)
             self.round_fn = None
+            # jittable banks get the whole round as ONE program (fewer
+            # dispatches, and bit-identical to the vmapped fleet path);
+            # host-offloaded banks keep the split updates/scatter/apply path
+            if getattr(getattr(algo, "bank", None), "jittable", False):
+                self.cohort_round_fn = jax.jit(
+                    make_cohort_round_fn(model, algo, batcher.k_steps,
+                                         weight_decay),
+                    donate_argnums=(0,))
+            else:
+                self.cohort_round_fn = None
         else:
-            @jax.jit
-            def round_fn(state, params, batch, active, eta_loc, eta_srv, rng):
-                updates, losses = client_updates(model.loss_fn, params, batch,
-                                                 eta_loc, K=batcher.k_steps,
-                                                 weight_decay=weight_decay)
-                return algo.round_step(state, params, updates, losses, active,
-                                       eta_srv, rng)
-
-            self.round_fn = round_fn
+            self.round_fn = jax.jit(make_dense_round_fn(
+                model, algo, batcher.k_steps, weight_decay))
 
     def learning_rates(self, t: int) -> tuple[float, float]:
         """η_local, η_server for round t (update-clock aware)."""
@@ -206,12 +257,18 @@ class RoundRunner:
             t, client_ids=np.where(valid, padded, 0))
         eta_loc, eta_srv = self.learning_rates(t)
         self.rng, sub = jax.random.split(self.rng)
-        updates, losses = self.cohort_updates_fn(self.params, batch,
-                                                 jnp.float32(eta_loc))
-        self.state, mean_g, metrics = self.algo.round_step_cohort(
-            self.state, padded, valid, updates, losses, rng=sub)
-        self.params = self.apply_mean_fn(self.params, mean_g,
-                                         jnp.float32(eta_srv))
+        if self.cohort_round_fn is not None:
+            self.state, self.params, metrics = self.cohort_round_fn(
+                self.state, self.params, batch, jnp.asarray(padded),
+                jnp.asarray(valid), jnp.float32(eta_loc),
+                jnp.float32(eta_srv), sub)
+        else:
+            updates, losses = self.cohort_updates_fn(self.params, batch,
+                                                     jnp.float32(eta_loc))
+            self.state, mean_g, metrics = self.algo.round_step_cohort(
+                self.state, padded, valid, updates, losses, rng=sub)
+            self.params = self.apply_mean_fn(self.params, mean_g,
+                                             jnp.float32(eta_srv))
         self.hist.record_round(t, metrics, sim_time=sim_time)
         return metrics
 
@@ -232,16 +289,22 @@ def run_fl(*, model, algo, participation, batcher, schedule: Callable,
            weight_decay: float = 0.0, seed: int = 0,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
+           cohort_capacity: int | None = None,
            verbose: bool = False) -> tuple[Any, FLHistory]:
     """Run T round-synchronous rounds of federated training.
 
     batcher.sample_round(t) -> batch pytree with leaves (N, K, mb, ...).
     schedule(t) -> server/local learning rate η_t (paper uses the same for both).
+    cohort_capacity pins the cohort-path pad width (default: per-round pow-2
+    buckets). Pad slots are mathematically inert either way, but fp32
+    reduction *grouping* depends on the padded length — pin the capacity when
+    comparing trajectories bit-for-bit across drivers (see tests/test_fleet).
     """
     runner = RoundRunner(model=model, algo=algo, batcher=batcher,
                          schedule=schedule, eta_local=eta_local,
                          weight_decay=weight_decay, seed=seed, params=params,
-                         uses_update_clock=uses_update_clock)
+                         uses_update_clock=uses_update_clock,
+                         cohort_capacity=cohort_capacity)
     t0 = time.time()
     for t in range(n_rounds):
         active = participation.sample(t)

@@ -1,0 +1,4 @@
+"""Vmapped fleet executor: K independent FL trials as one jitted program."""
+from repro.fleet.executor import (FleetHistory, FleetRunner,  # noqa: F401
+                                  make_fleet_eval, run_fleet)
+from repro.fleet.spec import FleetSpec, Trial, expand_grid  # noqa: F401

@@ -1,0 +1,345 @@
+"""Vmapped fleet executor — K independent FL trials as ONE jitted program.
+
+The paper's headline results are statistical claims over seeds ×
+participation scenarios × algorithms, but a Python loop over `run_fl` pays
+per-trial dispatch, per-trial retracing, and per-trial host→device traffic.
+The fleet executor stacks K trials along a leading *trial axis* and runs
+each round as a single `jit(vmap(...))` call:
+
+    params : (K, *shape)      state : per-algo leaves with a (K,) prefix
+    rngs   : (K, 2)           masks : (K, N) from K host-side processes
+
+Reuse, not reimplementation: the vmapped round is `jax.vmap` of the SAME
+pure functions `RoundRunner` jits (`core.runner.make_dense_round_fn`,
+`make_cohort_update_fn`, `apply_mean`), and the banked cohort path goes
+through the same `DenseBank` scatter body (vmapped jnp, or the grid-axis
+batched Pallas kernel `kernels.bank_scatter_batched`). Per trial the fleet
+is therefore bit-exactly the trajectory `run_fl` produces — property-tested
+in tests/test_fleet.py.
+
+What is and is not vmappable (DESIGN.md §7):
+  * dense algorithms (MIFA array/delta/int8, FedAvg baselines)   — yes
+  * BankedMIFA over DenseBank (jittable)                         — yes
+  * BankedMIFA over HostBank / Int8PagedBank (host-offloaded)    — no; these
+    live outside jit by design, run those trials sequentially.
+
+Host environment stays per-trial and un-vmapped: participation processes
+draw each trial's mask on the host exactly as `run_fl` would, and cohort
+batches are assembled per trial then stacked. The trial axis can be sharded
+over the mesh's data axes (`sharding.rules.fleet_trial_specs`).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runner import (FLHistory, _pow2_bucket, apply_mean,
+                               make_cohort_update_fn, make_dense_round_fn)
+from repro.fleet.spec import FleetSpec, Trial
+
+
+@dataclass
+class FleetHistory:
+    """Per-round metrics with a leading (K,) trial axis.
+
+    `trial(k)` materialises one trial's view as a plain `FLHistory`, so
+    downstream plotting/analysis written for `run_fl` works unchanged.
+    """
+
+    n_trials: int
+    labels: list[str] = field(default_factory=list)
+    rounds: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)     # (K,) per round
+    n_active: list = field(default_factory=list)       # (K,) per round
+    global_updates: list = field(default_factory=list)
+    eval_loss: list = field(default_factory=list)      # (t, (K,)) per eval
+    eval_acc: list = field(default_factory=list)
+    wall_time: float = 0.0
+
+    def record_round(self, t: int, metrics: dict) -> None:
+        self.rounds.append(t)
+        self.train_loss.append(np.asarray(metrics["loss"], np.float64))
+        self.n_active.append(np.asarray(metrics["n_active"], np.float64))
+        if "global_updates" in metrics:
+            self.global_updates.append(
+                np.asarray(metrics["global_updates"], np.float64))
+
+    def record_eval(self, t: int, eval_loss, eval_acc) -> None:
+        self.eval_loss.append((t, np.asarray(eval_loss, np.float64)))
+        self.eval_acc.append((t, np.asarray(eval_acc, np.float64)))
+
+    def stacked(self) -> dict:
+        """{'train_loss': (K, T), 'n_active': (K, T), ...} arrays."""
+        out = {"rounds": np.asarray(self.rounds),
+               "train_loss": np.stack(self.train_loss, axis=1)
+               if self.train_loss else np.zeros((self.n_trials, 0)),
+               "n_active": np.stack(self.n_active, axis=1)
+               if self.n_active else np.zeros((self.n_trials, 0))}
+        if self.global_updates:
+            out["global_updates"] = np.stack(self.global_updates, axis=1)
+        if self.eval_loss:
+            out["eval_rounds"] = np.asarray([t for t, _ in self.eval_loss])
+            out["eval_loss"] = np.stack([v for _, v in self.eval_loss], 1)
+            out["eval_acc"] = np.stack([v for _, v in self.eval_acc], 1)
+        return out
+
+    def trial(self, k: int) -> FLHistory:
+        h = FLHistory()
+        h.rounds = list(self.rounds)
+        h.train_loss = [float(v[k]) for v in self.train_loss]
+        h.n_active = [float(v[k]) for v in self.n_active]
+        h.global_updates = [float(v[k]) for v in self.global_updates]
+        h.eval_loss = [(t, float(v[k])) for t, v in self.eval_loss]
+        h.eval_acc = [(t, float(v[k])) for t, v in self.eval_acc]
+        h.wall_time = self.wall_time
+        return h
+
+
+class FleetRunner:
+    """K-trial counterpart of `core.runner.RoundRunner`.
+
+    The driver feeds `step(t, masks)` a (K, N) availability matrix — one
+    row per trial, drawn by that trial's own participation process — and
+    every round executes as one jitted, vmapped program. τ statistics are
+    not tracked (they are host-side O(K·N) bookkeeping; run the trial
+    sequentially if you need them).
+    """
+
+    def __init__(self, *, model, algo, batcher, schedule: Callable,
+                 seeds: Sequence[int], eta_local: Callable | float | None = None,
+                 weight_decay: float = 0.0, uses_update_clock: bool = False,
+                 cohort_capacity: int | None = None,
+                 labels: Sequence[str] | None = None, mesh=None, cfg=None):
+        self.model = model
+        self.algo = algo
+        self.batcher = batcher
+        self.schedule = schedule
+        self.eta_local = eta_local
+        self.uses_update_clock = uses_update_clock
+        self.cohort_capacity = cohort_capacity
+        self.n_trials = len(seeds)
+        self.n_clients = batcher.n_clients
+        # one PRNG stream per trial, identical to RoundRunner(seed=s):
+        # the key inits the params, then splits once per round
+        self.rngs = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+        self.params = jax.vmap(model.init)(self.rngs)
+        self.state = jax.vmap(
+            lambda p: algo.init_state(p, self.n_clients))(self.params)
+        self.hist = FleetHistory(self.n_trials,
+                                 labels=list(labels or
+                                             [f"seed{s}" for s in seeds]))
+        self.cohort_mode = getattr(algo, "cohort_based", False)
+
+        if self.cohort_mode:
+            if not getattr(algo.bank, "jittable", False):
+                raise NotImplementedError(
+                    "the vmapped fleet path needs a jittable bank "
+                    "(DenseBank); host-offloaded backends run sequentially")
+            updates_fn = make_cohort_update_fn(model, batcher.k_steps,
+                                               weight_decay)
+
+            def cohort_round(state, params, ubatch, idx, ids, valid,
+                             eta_loc, eta_srv, rngs):
+                # each distinct client's batch crosses host->device ONCE;
+                # trials gather their (cap, ...) slices on device
+                batch = jax.tree.map(lambda l: l[idx], ubatch)
+                updates, losses = jax.vmap(updates_fn)(params, batch,
+                                                       eta_loc)
+                state, mean_g, metrics = algo.round_step_cohort_fleet(
+                    state, ids, valid, updates, losses, rng=rngs)
+                params = jax.vmap(apply_mean)(params, mean_g, eta_srv)
+                return state, params, metrics
+
+            self.cohort_round_fn = jax.jit(cohort_round,
+                                           donate_argnums=(0,))
+            self.round_fn = None
+        else:
+            base = make_dense_round_fn(model, algo, batcher.k_steps,
+                                       weight_decay)
+            # batch is shared across trials (the data is the environment):
+            # in_axes=None broadcasts it, everything else carries the K axis
+            self.round_fn = jax.jit(
+                jax.vmap(base, in_axes=(0, 0, None, 0, 0, 0, 0)),
+                donate_argnums=(0,))
+            self.cohort_round_fn = None
+
+        if mesh is not None:
+            self._shard_trial_axis(mesh, cfg)
+
+    def _shard_trial_axis(self, mesh, cfg) -> None:
+        from jax.sharding import NamedSharding
+        from repro.sharding.rules import fleet_axis_specs, fleet_trial_specs
+        put = lambda tree, specs: jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            tree, specs)
+        if cfg is not None:
+            self.params = put(self.params,
+                              fleet_trial_specs(self.params, cfg, mesh))
+        else:
+            self.params = put(self.params,
+                              fleet_axis_specs(self.params, mesh))
+        self.state = put(self.state, fleet_axis_specs(self.state, mesh))
+
+    # ------------------------------------------------------------------ #
+    def _split(self):
+        out = jax.vmap(jax.random.split)(self.rngs)      # (K, 2, 2)
+        return out[:, 0], out[:, 1]
+
+    def learning_rates(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """(η_local (K,), η_server (K,)) f32 — per-trial update clocks."""
+        if self.uses_update_clock and "t_updates" in self.state:
+            clocks = np.asarray(self.state["t_updates"], np.int64) + 1
+        else:
+            clocks = np.full(self.n_trials, t + 1, np.int64)
+        eta_srv = np.array([float(self.schedule(int(c))) for c in clocks],
+                           np.float32)
+        if self.eta_local is None:
+            eta_loc = eta_srv
+        elif callable(self.eta_local):
+            eta_loc = np.array(
+                [float(self.eta_local(int(c))) for c in clocks], np.float32)
+        else:
+            eta_loc = np.full(self.n_trials, float(self.eta_local),
+                              np.float32)
+        return eta_loc, eta_srv
+
+    # ------------------------------------------------------------------ #
+    def step(self, t: int, masks: np.ndarray) -> dict:
+        """Apply round t to all trials; masks (K, N) bool applied-updates."""
+        masks = np.asarray(masks, bool)
+        assert masks.shape == (self.n_trials, self.n_clients), masks.shape
+        if self.cohort_mode:
+            return self.step_cohort(
+                t, [np.flatnonzero(m) for m in masks])
+        batch = self.batcher.sample_round(t)
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rngs, subs = self._split()
+        self.state, self.params, metrics = self.round_fn(
+            self.state, self.params, batch, jnp.asarray(masks),
+            jnp.asarray(eta_loc), jnp.asarray(eta_srv), subs)
+        self.hist.record_round(t, metrics)
+        return metrics
+
+    def step_cohort(self, t: int, ids_per_trial: Sequence[np.ndarray]) -> dict:
+        """Cohort round for all trials; ids_per_trial[k] are trial k's
+        active rows. All trials pad to one shared capacity (the pow-2
+        bucket of the largest cohort, or `cohort_capacity`) — pad slots are
+        inert, so per-trial results are unchanged by the shared padding."""
+        assert self.cohort_mode
+        from repro.bank.base import check_unique_ids
+        K = self.n_trials
+        ids_per_trial = [np.asarray(i, np.int64) for i in ids_per_trial]
+        for ids in ids_per_trial:
+            check_unique_ids(ids)
+        cmax = max((len(i) for i in ids_per_trial), default=0)
+        cap = self.cohort_capacity or _pow2_bucket(cmax)
+        if cmax > cap:
+            # widening is shared by ALL trials (vmap needs one shape), so a
+            # pinned capacity no longer matches what per-trial run_fl pads
+            # non-overflowing trials to — warn instead of silently breaking
+            # the bit-exact cross-path comparison the pin exists for
+            import warnings
+            warnings.warn(
+                f"cohort of {cmax} overflows pinned cohort_capacity="
+                f"{self.cohort_capacity}; widening ALL trials to "
+                f"{_pow2_bucket(cmax)} — fleet trajectories may no longer "
+                "be bit-exact vs sequential runs pinned to the original "
+                "capacity", stacklevel=2)
+            cap = _pow2_bucket(cmax)
+        padded = np.full((K, cap), self.n_clients, np.int64)
+        valid = np.zeros((K, cap), bool)
+        for k, ids in enumerate(ids_per_trial):
+            padded[k, :len(ids)] = ids
+            valid[k, :len(ids)] = True
+        # pad slots sample client 0's batch (computed then masked), exactly
+        # like RoundRunner.step_cohort. Trials share the batcher and the
+        # round index, so each distinct client is sampled ONCE for the whole
+        # fleet (same (seed, t, i) streams as per-trial sampling), uploaded
+        # once, and every trial gathers its (cap, ...) slice on device. The
+        # union is padded to a pow-2 bucket so jit traces are reused.
+        wanted = np.where(valid, padded, 0)                # (K, cap)
+        uniq, inv = np.unique(wanted, return_inverse=True)
+        u_pad = _pow2_bucket(len(uniq))
+        uniq = np.concatenate([uniq, np.full(u_pad - len(uniq), uniq[0])])
+        ubatch = self.batcher.sample_round(t, client_ids=uniq)
+        idx = inv.reshape(K, cap).astype(np.int32)
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rngs, subs = self._split()
+        self.state, self.params, metrics = self.cohort_round_fn(
+            self.state, self.params, ubatch, jnp.asarray(idx),
+            jnp.asarray(padded), jnp.asarray(valid), jnp.asarray(eta_loc),
+            jnp.asarray(eta_srv), subs)
+        self.hist.record_round(t, metrics)
+        return metrics
+
+    def evaluate(self, t: int, eval_fn: Callable) -> tuple[Any, Any]:
+        """eval_fn consumes stacked params -> ((K,) losses, (K,) accs)."""
+        el, ea = eval_fn(self.params)
+        self.hist.record_eval(t, el, ea)
+        return el, ea
+
+    def finalize(self) -> tuple[Any, FleetHistory]:
+        return self.params, self.hist
+
+
+def make_fleet_eval(model, eval_batch: dict) -> Callable:
+    """Vmapped eval: stacked params (K, ...) -> (losses (K,), accs (K,))."""
+    batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+
+    @jax.jit
+    def ev(params_stack):
+        def one(p):
+            loss, _ = model.loss_fn(p, batch)
+            return loss, model.accuracy(p, batch)
+        return jax.vmap(one)(params_stack)
+
+    return ev
+
+
+def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
+              spec: FleetSpec | None = None, algo=None,
+              trials: Sequence[Trial] | None = None,
+              eta_local: Callable | float | None = None,
+              weight_decay: float = 0.0, eval_fn: Callable | None = None,
+              eval_every: int = 10, uses_update_clock: bool = False,
+              cohort_capacity: int | None = None, mesh=None, cfg=None,
+              verbose: bool = False) -> tuple[Any, FleetHistory]:
+    """Run T rounds of K independent trials as one vmapped program.
+
+    The K-trial counterpart of `core.runner.run_fl`: pass a `FleetSpec`
+    (algo + trials + clock flag), or `algo` + `trials` explicitly. Each
+    trial's participation process draws its own (N,) mask per round on the
+    host; everything device-side carries the trial axis. `eval_fn` consumes
+    stacked params and returns (K,) losses/accs (see `make_fleet_eval`).
+    """
+    if spec is not None:
+        algo = spec.algo
+        trials = spec.trials
+        uses_update_clock = spec.uses_update_clock
+        cohort_capacity = spec.cohort_capacity or cohort_capacity
+    assert algo is not None and trials, "need a FleetSpec or algo + trials"
+    runner = FleetRunner(
+        model=model, algo=algo, batcher=batcher, schedule=schedule,
+        seeds=[tr.seed for tr in trials], eta_local=eta_local,
+        weight_decay=weight_decay, uses_update_clock=uses_update_clock,
+        cohort_capacity=cohort_capacity,
+        labels=[tr.label or f"seed{tr.seed}" for tr in trials],
+        mesh=mesh, cfg=cfg)
+    parts = [tr.participation for tr in trials]
+    t0 = time.time()
+    for t in range(n_rounds):
+        masks = np.stack([np.asarray(p.sample(t), bool) for p in parts])
+        runner.step(t, masks)
+        if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
+            el, ea = runner.evaluate(t, eval_fn)
+            if verbose:
+                print(f"  round {t:5d} "
+                      f"loss={np.asarray(el).mean():.4f} "
+                      f"acc={np.asarray(ea).mean():.4f}")
+    runner.hist.wall_time = time.time() - t0
+    return runner.finalize()

@@ -1,0 +1,112 @@
+"""FleetSpec — declarative sweep grids expanded into batched trial lists.
+
+A *trial* is one independent FL run: (init seed, participation process,
+trial label). A *FleetSpec* is a group of trials that can execute as ONE
+vmapped program — which requires the algorithm's *static* configuration
+(class, memory layout, cohort capacity, FedAvgSampling's S, FedAvgIS's
+probability table) to be shared across the group; everything that is traced
+(init params, RNG streams, availability masks, learning rates) batches
+freely along the trial axis.
+
+`expand_grid` builds the cross product seeds × availability-parameter points
+per algorithm:
+
+    specs = expand_grid(
+        algos={"mifa": MIFA(memory="array"), "fedavg": BiasedFedAvg()},
+        seeds=(0, 1, 2),
+        avail_grid=({"p_min": 0.1}, {"p_min": 0.2}),
+        make_participation=lambda seed, p_min: BernoulliParticipation(
+            label_correlated_probs(labels, p_min), seed=seed + 100),
+    )
+    for spec in specs:
+        params, hist = run_fleet(spec=spec, model=model, batcher=batcher, ...)
+
+One FleetSpec per algorithm (static config can't batch); K = |seeds| ×
+|avail_grid| trials inside each. Algorithms whose static config depends on
+the availability point (e.g. FedAvgIS's probs) need one spec per point —
+`expand_grid` accepts `algos` values as callables `(avail_kwargs) -> algo`
+for that case and then emits one spec per (algo, avail point).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+
+@dataclass(frozen=True)
+class Trial:
+    """One independent FL run inside a fleet group."""
+
+    seed: int
+    participation: Any            # host-side process with .sample(t) -> (N,)
+    label: str = ""
+
+
+@dataclass
+class FleetSpec:
+    """A group of trials sharing one vmapped executable."""
+
+    algo: Any
+    trials: list[Trial] = field(default_factory=list)
+    uses_update_clock: bool = False
+    cohort_capacity: int | None = None
+    name: str = ""
+
+    @property
+    def n_trials(self) -> int:
+        return len(self.trials)
+
+    @property
+    def seeds(self) -> tuple:
+        return tuple(t.seed for t in self.trials)
+
+    @property
+    def participations(self) -> tuple:
+        return tuple(t.participation for t in self.trials)
+
+    @property
+    def labels(self) -> list[str]:
+        return [t.label for t in self.trials]
+
+
+def _avail_tag(kwargs: dict) -> str:
+    return ",".join(f"{k}{v}" for k, v in sorted(kwargs.items()))
+
+
+def expand_grid(*, algos: dict[str, Any], seeds: Sequence[int],
+                make_participation: Callable,
+                avail_grid: Sequence[dict] = ({},),
+                clock: Sequence[str] = (),
+                cohort_capacity: int | None = None) -> list[FleetSpec]:
+    """Expand (algorithm × seed × availability point) into FleetSpecs.
+
+    algos: name -> algorithm instance, or name -> callable taking the
+      availability kwargs and returning an instance (for algorithms whose
+      static config depends on the point, e.g. FedAvgIS). Instances get one
+      spec with seeds × avail_grid trials; callables get one spec PER grid
+      point (seeds only batch).
+    make_participation: (seed=..., **avail_kwargs) -> participation process.
+    clock: algo names that use the update clock (FedAvgSampling-style).
+    """
+    specs: list[FleetSpec] = []
+    for name, algo in algos.items():
+        common = dict(uses_update_clock=name in clock,
+                      cohort_capacity=cohort_capacity)
+        if callable(algo) and not hasattr(algo, "init_state"):
+            for av in avail_grid:
+                trials = [
+                    Trial(seed=s,
+                          participation=make_participation(seed=s, **av),
+                          label=f"{name}/{_avail_tag(av)}/seed{s}")
+                    for s in seeds]
+                specs.append(FleetSpec(algo=algo(**av), trials=trials,
+                                       name=f"{name}/{_avail_tag(av)}",
+                                       **common))
+        else:
+            trials = [
+                Trial(seed=s, participation=make_participation(seed=s, **av),
+                      label=f"{name}/{_avail_tag(av)}/seed{s}")
+                for av in avail_grid for s in seeds]
+            specs.append(FleetSpec(algo=algo, trials=trials, name=name,
+                                   **common))
+    return specs

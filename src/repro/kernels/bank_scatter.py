@@ -105,3 +105,81 @@ def bank_scatter(bank: jnp.ndarray, updates: jnp.ndarray, ids: jnp.ndarray,
         valid.astype(jnp.int32), block_m=block_m,
         interpret=resolve_interpret(interpret))
     return new_bank, dsum[0]
+
+
+# --------------------------------------------------------------------------- #
+# batched (fleet) variant: K independent banks in one launch
+# --------------------------------------------------------------------------- #
+
+def _kernel_batched(ids_ref, valid_ref, u_ref, bank_ref, bank_out_ref,
+                    dsum_ref):
+    k = pl.program_id(0)
+    a = pl.program_id(2)
+    valid = valid_ref[k, a] > 0
+    old = bank_ref[...]                                   # (1, 1, bm)
+    u = u_ref[...]                                        # (1, 1, bm) f32
+
+    @pl.when(a == 0)
+    def _init():
+        dsum_ref[...] = jnp.zeros_like(dsum_ref)
+
+    u_st = u.astype(bank_ref.dtype)
+    dsum_ref[...] += jnp.where(
+        valid, u_st.astype(jnp.float32) - old.astype(jnp.float32), 0.0)
+    bank_out_ref[...] = jnp.where(valid, u_st, old)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _bank_scatter_batched(banks, updates, ids, valid, *, block_m, interpret):
+    K, r, m = banks.shape
+    c = updates.shape[1]
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    assert updates.shape == (K, c, m), (updates.shape, (K, c, m))
+    assert ids.shape == valid.shape == (K, c), (ids.shape, valid.shape)
+
+    # trial axis outermost, cohort rows innermost: the (k, j) delta-sum tile
+    # stays resident in VMEM and accumulates across that trial's cohort,
+    # exactly like the single-trial kernel's k-loop
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                            # ids, valid (K, C)
+        grid=(K, m // bm, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm), lambda k, j, a, ids, valid: (k, a, j)),
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, ids, valid: (k, ids[k, a], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, ids, valid: (k, ids[k, a], j)),
+            pl.BlockSpec((1, 1, bm), lambda k, j, a, ids, valid: (k, 0, j)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((K, r, m), banks.dtype),
+                   jax.ShapeDtypeStruct((K, 1, m), jnp.float32)],
+        input_output_aliases={3: 0},                      # banks in place
+        interpret=interpret,
+    )(ids, valid, updates, banks)
+
+
+def bank_scatter_batched(banks: jnp.ndarray, updates: jnp.ndarray,
+                         ids: jnp.ndarray, valid: jnp.ndarray, *,
+                         block_m: int = 512,
+                         interpret: bool | None = None):
+    """Grid-axis batched `bank_scatter` for the fleet executor.
+
+    banks (K, R, M); updates (K, C, M) f32; ids (K, C) int32 < R;
+    valid (K, C) bool. Returns (new_banks (K, R, M), delta_sum (K, M) f32) —
+    per trial k exactly what `bank_scatter(banks[k], ...)` returns. The K
+    trials share one kernel launch: the trial index is the outermost grid
+    dimension, so each trial's cohort streams through VMEM back-to-back with
+    no host round-trips between trials.
+    """
+    new_banks, dsum = _bank_scatter_batched(
+        banks, updates.astype(jnp.float32), ids.astype(jnp.int32),
+        valid.astype(jnp.int32), block_m=block_m,
+        interpret=resolve_interpret(interpret))
+    return new_banks, dsum[:, 0]

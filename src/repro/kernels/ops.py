@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.backend import resolve_interpret, use_pallas  # noqa: F401
-from repro.kernels.bank_scatter import bank_scatter
+from repro.kernels.bank_scatter import bank_scatter, bank_scatter_batched
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mifa_aggregate import mifa_aggregate
 from repro.kernels.ssd_scan import ssd_scan
@@ -117,6 +117,48 @@ def bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m: int = 512,
     return _bank_update_tree(rows_tree, upd_tree, ids, valid,
                              block_m=block_m,
                              interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m,
+                            interpret):
+    def one(rows, u):
+        K, r = rows.shape[0], rows.shape[1]
+        c = u.shape[1]
+        m_raw = int(np.prod(rows.shape[2:]))
+        if m_raw <= _BANK_SINGLE_BLOCK:
+            rows2, m = rows.reshape(K, r, -1), m_raw
+            u2 = u.reshape(K, c, -1)
+            bm = m_raw
+        else:
+            rows2, m = _pad_to(rows.reshape(K, r, -1), block_m)
+            u2, _ = _pad_to(u.reshape(K, c, -1), block_m)
+            bm = min(block_m, rows2.shape[2])
+        rn, ds = bank_scatter_batched(rows2, u2, ids, valid, block_m=bm,
+                                      interpret=interpret)
+        return (rn[:, :, :m].reshape(rows.shape),
+                ds[:, :m].reshape((K,) + rows.shape[2:]))
+
+    out = jax.tree.map(one, rows_tree, upd_tree)
+    rows_new = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda o: isinstance(o, tuple))
+    dsum = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda o: isinstance(o, tuple))
+    return rows_new, dsum
+
+
+def fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *,
+                           block_m: int = 512,
+                           interpret: bool | None = None):
+    """Batched (K-trial) fused bank update over a pytree.
+
+    rows_tree: leaves (K, R, *shape); upd_tree: leaves (K, C, *shape) f32;
+    ids/valid (K, C). Returns (new_rows_tree, delta_sum_tree with leaves
+    (K, *shape) f32) — per trial identical to `bank_update_tree`.
+    """
+    return _fleet_bank_update_tree(rows_tree, upd_tree, ids, valid,
+                                   block_m=block_m,
+                                   interpret=resolve_interpret(interpret))
 
 
 def attention(q, k, v, *, causal=True, block_q=128, block_k=128,

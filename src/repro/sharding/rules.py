@@ -220,6 +220,40 @@ def bank_row_specs(params: Any, cfg: ArchConfig, mesh, n_rows: int) -> Any:
     return client_state_specs(params, cfg, mesh, n_clients=n_rows)
 
 
+def fleet_trial_specs(stacked_params: Any, cfg: ArchConfig, mesh) -> Any:
+    """Specs for fleet-stacked parameters: leaves (K, *param_shape).
+
+    Independent trials are pure data parallelism, so the trial axis shards
+    over the mesh's data (and pod) axes; the param dims reuse the model-only
+    trailing rules (the data axis is taken by trials, so fsdp is dropped) —
+    the same convention as the vmap-mode client axis in
+    `client_state_specs`. Indivisible trial counts fall back to replication
+    via `sanitize`, so K should be a multiple of `data_axis_size(mesh)`.
+    """
+    dax = data_axes(mesh)
+
+    def fn(path, leaf):
+        spec, lead = _spec_for(path, leaf, False, extra_leading=1)
+        full = (dax,) + lead + tuple(spec)
+        return P(*sanitize(full, tuple(leaf.shape), mesh))
+
+    return jax.tree_util.tree_map_with_path(fn, stacked_params)
+
+
+def fleet_axis_specs(stacked_state: Any, mesh) -> Any:
+    """Generic trial-axis specs for opaque fleet state (algorithm state,
+    memory-bank rows, RNG keys): axis 0 over data/pod, the rest replicated.
+    Use `fleet_trial_specs` for parameters, where trailing dims can keep
+    their model sharding."""
+    dax = data_axes(mesh)
+
+    def fn(leaf):
+        full = (dax,) + (None,) * (leaf.ndim - 1)
+        return P(*sanitize(full, tuple(leaf.shape), mesh))
+
+    return jax.tree.map(fn, stacked_state)
+
+
 def cache_specs(cache: Any, cfg: ArchConfig, mesh, batch_size: int) -> Any:
     """KV/SSM cache specs.
 

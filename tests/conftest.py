@@ -1,3 +1,12 @@
+"""Shared test scaffolding: import path, device pinning, tiny-problem
+fixtures, and the `slow` marker.
+
+Tier-1 (`pytest -x -q`) deselects tests marked `@pytest.mark.slow`; run
+them with `--runslow`. The session-scoped factories below memoise the
+small synthetic FL problems that used to be copy-pasted per test file —
+one construction per distinct shape, shared by every test that asks.
+"""
+import functools
 import os
 import sys
 
@@ -7,3 +16,81 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Smoke tests and benches must see exactly ONE device (the dry-run sets its own
 # XLA_FLAGS in a subprocess); keep CPU determinism.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked @pytest.mark.slow")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy test, deselected from tier-1 (enable with --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow: tier-1 deselects (--runslow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+# --------------------------------------------------------------------------- #
+# tiny-problem factories (session-scoped, memoised per shape)
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="session")
+def tiny_problem():
+    """Factory: tiny_problem(n_clients=10, ...) -> (model, batcher).
+
+    The paper's logistic setup shrunk to test size. Memoised — model and
+    batcher are stateless after construction, so tests share them freely.
+    """
+    from repro.configs import get_config
+    from repro.data import (ClientBatcher, label_skew_partition,
+                            make_classification)
+    from repro.models import build_model
+
+    @functools.lru_cache(maxsize=None)
+    def make(n_clients=10, seed=0, n_per_class=40, batch_size=8, k_steps=2,
+             model_name="paper_logistic"):
+        cfg = get_config(model_name).replace(fl_clients=n_clients)
+        model = build_model(cfg)
+        X, y = make_classification(10, cfg.d_model, n_per_class, noise=1.0,
+                                   seed=seed)
+        idx, _ = label_skew_partition(y, n_clients, seed=seed)
+        batcher = ClientBatcher(X, y, idx, batch_size=batch_size,
+                                k_steps=k_steps, seed=seed)
+        return model, batcher
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def tiny_runner(tiny_problem):
+    """Factory: tiny_runner(algo, n_clients=10, seed=0, **problem_kw) ->
+    RoundRunner on the shared tiny problem."""
+    def make(algo, *, n_clients=10, seed=0, schedule=None, **problem_kw):
+        from repro.core import RoundRunner
+        from repro.optim import inv_t
+        model, batcher = tiny_problem(n_clients=n_clients, **problem_kw)
+        return RoundRunner(model=model, algo=algo, batcher=batcher,
+                           schedule=schedule or inv_t(1.0),
+                           weight_decay=1e-3, seed=seed)
+    return make
+
+
+@pytest.fixture(scope="session")
+def bernoulli_part():
+    """Factory: bernoulli_part(n, p=0.5, seed=0) -> BernoulliParticipation."""
+    import numpy as np
+    from repro.core import BernoulliParticipation
+
+    def make(n, p=0.5, seed=0):
+        return BernoulliParticipation(np.full(n, p), seed=seed)
+    return make

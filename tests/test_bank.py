@@ -14,9 +14,7 @@ from repro.bank import (BankedMIFA, DenseBank, HostBank, Int8PagedBank,
 from repro.configs import get_config
 from repro.core import MIFA, BernoulliParticipation, run_fl
 from repro.core.runner import RoundRunner, _pow2_bucket
-from repro.data import (ClientBatcher, ProceduralBatcher,
-                        label_skew_partition, make_classification)
-from repro.models import build_model
+from repro.data import ProceduralBatcher
 
 N = 8
 
@@ -189,19 +187,10 @@ def test_make_bank_rejects_unknown():
 # cohort round path through RoundRunner / run_fl
 # --------------------------------------------------------------------------- #
 
-def _paper_problem(n_clients=10, seed=0):
-    cfg = get_config("paper_logistic").replace(fl_clients=n_clients)
-    model = build_model(cfg)
-    X, y = make_classification(10, cfg.d_model, 40, noise=1.0, seed=seed)
-    idx, _ = label_skew_partition(y, n_clients, seed=seed)
-    batcher = ClientBatcher(X, y, idx, batch_size=8, k_steps=2, seed=seed)
-    return model, batcher
-
-
 @pytest.mark.parametrize("backend", ["dense", "host"])
-def test_banked_run_fl_matches_dense_mifa_trajectory(backend):
+def test_banked_run_fl_matches_dense_mifa_trajectory(backend, tiny_problem):
     """Acceptance property: same params AND same per-round history."""
-    model, batcher = _paper_problem()
+    model, batcher = tiny_problem(n_clients=10)
     kw = dict(model=model, batcher=batcher, schedule=lambda t: 0.1 / (1 + t),
               n_rounds=8, seed=0)
     part = lambda: BernoulliParticipation(np.full(10, 0.5), seed=1)
@@ -216,9 +205,9 @@ def test_banked_run_fl_matches_dense_mifa_trajectory(backend):
     assert h1.n_active == h2.n_active
 
 
-def test_step_cohort_skips_mask_work():
+def test_step_cohort_skips_mask_work(tiny_problem):
     """Direct cohort stepping: ids in, O(|A|) batch out, same math."""
-    model, batcher = _paper_problem()
+    model, batcher = tiny_problem(n_clients=10)
     r1 = RoundRunner(model=model, algo=BankedMIFA(DenseBank()),
                      batcher=batcher, schedule=lambda t: 0.1, seed=0)
     r2 = RoundRunner(model=model, algo=BankedMIFA(DenseBank()),
@@ -236,8 +225,8 @@ def test_step_cohort_skips_mask_work():
     assert r2.stats.rounds == 0          # τ stats skipped on the ids path
 
 
-def test_empty_round_is_noop_for_params_memory():
-    model, batcher = _paper_problem()
+def test_empty_round_is_noop_for_params_memory(tiny_problem):
+    model, batcher = tiny_problem(n_clients=10)
     runner = RoundRunner(model=model, algo=BankedMIFA(DenseBank()),
                          batcher=batcher, schedule=lambda t: 0.1, seed=0)
     runner.step(0, np.ones(10, bool))
@@ -260,8 +249,8 @@ def test_pow2_bucketing():
         [1, 1, 2, 4, 4, 8, 16]
 
 
-def test_cohort_capacity_bounds_traces():
-    model, batcher = _paper_problem()
+def test_cohort_capacity_bounds_traces(tiny_problem):
+    model, batcher = tiny_problem(n_clients=10)
     runner = RoundRunner(model=model, algo=BankedMIFA(DenseBank()),
                          batcher=batcher, schedule=lambda t: 0.1, seed=0,
                          cohort_capacity=8)
@@ -272,7 +261,7 @@ def test_cohort_capacity_bounds_traces():
     assert len(runner.hist.rounds) == 5
 
 
-def test_duplicate_cohort_ids_rejected():
+def test_duplicate_cohort_ids_rejected(tiny_problem):
     """Duplicates would silently corrupt G_sum — every entry point refuses."""
     key = jax.random.PRNGKey(0)
     params = _tree(key)
@@ -287,19 +276,28 @@ def test_duplicate_cohort_ids_rejected():
         # duplicates among invalid pad slots are fine (shared dummy row)
         bank.scatter(bs, np.array([1, N, N]), cu,
                      valid=np.array([True, False, False]), rng=key)
-    model, batcher = _paper_problem()
+    model, batcher = tiny_problem(n_clients=10)
     runner = RoundRunner(model=model, algo=BankedMIFA(DenseBank()),
                          batcher=batcher, schedule=lambda t: 0.1, seed=0)
     with pytest.raises(ValueError, match="unique"):
         runner.step_cohort(0, np.array([2, 2]))
 
 
+def test_duplicate_check_is_enforced_in_base_scatter():
+    """The check lives in MemoryBank.scatter (template method) — backends
+    implement `_scatter_rows` and MUST NOT override `scatter`, or they
+    silently drift out from under the shared validation."""
+    for cls in (DenseBank, HostBank, Int8PagedBank):
+        assert cls.scatter is MemoryBank.scatter, cls
+        assert cls._scatter_rows is not MemoryBank._scatter_rows, cls
+
+
 # --------------------------------------------------------------------------- #
 # batchers: compact == full slice
 # --------------------------------------------------------------------------- #
 
-def test_client_batcher_compact_matches_full():
-    _, batcher = _paper_problem()
+def test_client_batcher_compact_matches_full(tiny_problem):
+    _, batcher = tiny_problem(n_clients=10)
     full = batcher.sample_round(3)
     ids = np.array([7, 0, 4])
     compact = batcher.sample_round(3, client_ids=ids)

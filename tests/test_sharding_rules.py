@@ -129,3 +129,32 @@ def test_multipod_client_axis_spans_pods():
     lead = tuple(jax.tree.leaves(
         specs, is_leaf=lambda x: isinstance(x, P))[0])[0]
     assert lead == ("pod", "data")
+
+
+def test_fleet_trial_specs_shard_trial_axis():
+    """Fleet-stacked params: trial axis on data/pod, model dims kept."""
+    cfg, params = _params_sds("granite_3_8b")
+    K = 32
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((K,) + tuple(l.shape), l.dtype),
+        params)
+    for mesh, lead_expect in ((mesh_pod(), ("data",)),
+                              (mesh_multipod(), ("pod", "data"))):
+        specs = rules.fleet_trial_specs(stacked, cfg, mesh)
+        _check_divisibility(specs, stacked, mesh)
+        w1 = tuple(specs["segments"]["0"]["mlp"]["w1"])   # (K, n, d, f)
+        assert w1[0] in (lead_expect, lead_expect[0])
+        assert "model" in w1                              # TP preserved
+
+
+def test_fleet_axis_specs_generic_state():
+    """Opaque fleet state: axis 0 over data, everything else replicated;
+    indivisible trial counts fall back to full replication."""
+    mesh = mesh_pod()
+    state = {"G": jax.ShapeDtypeStruct((32, 100, 8), jnp.float32),
+             "t": jax.ShapeDtypeStruct((32,), jnp.int32),
+             "odd": jax.ShapeDtypeStruct((7, 3), jnp.float32)}
+    specs = rules.fleet_axis_specs(state, mesh)
+    assert tuple(specs["G"])[0] in ("data", ("data",))
+    assert all(e is None for e in tuple(specs["G"])[1:])
+    assert all(e is None for e in tuple(specs["odd"]))

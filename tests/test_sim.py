@@ -1,13 +1,11 @@
 """Discrete-event runtime simulator: determinism, policy ordering,
-latency models, and the Assumption-4 property of the blackout patterns."""
+latency models, event-heap edge cases, and the Assumption-4 property of
+the blackout patterns."""
 import numpy as np
 import pytest
 
-from repro.configs import get_config
 from repro.core import (MIFA, AdversarialParticipation, BiasedFedAvg,
-                        RoundRunner, tau_matrix)
-from repro.data import ClientBatcher, label_skew_partition, make_classification
-from repro.models import build_model
+                        RoundRunner, TraceParticipation, tau_matrix)
 from repro.optim import inv_t
 from repro.sim import (Deadline, EventQueue, FedSimEngine, Impatient,
                        LognormalLatency, ShiftedExponentialLatency, SimConfig,
@@ -17,16 +15,6 @@ from repro.sim import (Deadline, EventQueue, FedSimEngine, Impatient,
 N = 9
 
 
-def make_runner(algo, seed=0):
-    cfg = get_config("paper_logistic").replace(fl_clients=N)
-    model = build_model(cfg)
-    X, y = make_classification(10, cfg.d_model, 60, seed=0)
-    idx, _ = label_skew_partition(y, N, seed=0)
-    batcher = ClientBatcher(X, y, idx, batch_size=8, k_steps=2, seed=0)
-    return RoundRunner(model=model, algo=algo, batcher=batcher,
-                       schedule=inv_t(1.0), weight_decay=1e-3, seed=seed)
-
-
 def blackout(seed=0):
     periods = np.array([4] * 3 + [3] * 3 + [8] * 3)
     offs = np.array([3] * 3 + [1] * 3 + [1] * 3)
@@ -34,10 +22,26 @@ def blackout(seed=0):
     return AdversarialParticipation(N, periods, offs, phases)
 
 
-def make_engine(policy, algo, seed=0):
-    return FedSimEngine(make_runner(algo), policy, blackout(),
-                        tiered_shifted_exponential(N, seed=7),
-                        config=SimConfig(epoch_s=4.0), seed=13 + seed)
+@pytest.fixture
+def make_runner(tiny_problem):
+    def _make(algo, seed=0):
+        model, batcher = tiny_problem(n_clients=N, n_per_class=60)
+        return RoundRunner(model=model, algo=algo, batcher=batcher,
+                           schedule=inv_t(1.0), weight_decay=1e-3, seed=seed)
+    return _make
+
+
+@pytest.fixture
+def make_engine(make_runner):
+    def _make(policy, algo, seed=0, participation=None, latency=None,
+              config=None):
+        return FedSimEngine(
+            make_runner(algo, seed),
+            policy, participation if participation is not None else blackout(),
+            latency if latency is not None
+            else tiered_shifted_exponential(N, seed=7),
+            config=config or SimConfig(epoch_s=4.0), seed=13 + seed)
+    return _make
 
 
 # --------------------------------------------------------------------------- #
@@ -58,7 +62,7 @@ def test_event_queue_fifo_on_ties():
 # engine determinism + simulated-seconds axis
 # --------------------------------------------------------------------------- #
 
-def test_engine_deterministic_event_sequence():
+def test_engine_deterministic_event_sequence(make_engine):
     logs = []
     for _ in range(2):
         eng = make_engine(Impatient(), MIFA(memory="array"))
@@ -68,7 +72,7 @@ def test_engine_deterministic_event_sequence():
     assert logs[0][1] == logs[1][1]        # identical round close times
 
 
-def test_sim_seconds_strictly_increasing():
+def test_sim_seconds_strictly_increasing(make_engine):
     eng = make_engine(WaitForS(s=3), BiasedFedAvg())
     _, hist = eng.run(10)
     t = np.asarray(hist.sim_seconds)
@@ -78,7 +82,7 @@ def test_sim_seconds_strictly_increasing():
     assert taus.shape == (10, N) and np.all(np.diff(times) > 0)
 
 
-def test_impatient_never_slower_than_wait_for_all():
+def test_impatient_never_slower_than_wait_for_all(make_engine):
     rounds = 10
     eng_imp = make_engine(Impatient(), BiasedFedAvg())
     eng_all = make_engine(WaitForAll(), BiasedFedAvg())
@@ -92,7 +96,7 @@ def test_impatient_never_slower_than_wait_for_all():
     assert eng_imp.now < eng_all.now
 
 
-def test_deadline_drops_late_responders():
+def test_deadline_drops_late_responders(make_engine):
     eng = make_engine(Deadline(deadline_s=0.5), BiasedFedAvg())
     eng.run(6)
     # 0.5s deadline < slow-tier shift (2.0s): slow devices must be dropped
@@ -101,13 +105,13 @@ def test_deadline_drops_late_responders():
     assert all(r["n_applied"] < N for r in eng.round_log[1:])
 
 
-def test_wait_for_s_applies_exactly_s():
+def test_wait_for_s_applies_exactly_s(make_engine):
     eng = make_engine(WaitForS(s=4), BiasedFedAvg())
     eng.run(6)
     assert all(r["n_applied"] == 4 for r in eng.round_log)
 
 
-def test_max_sim_seconds_stops_at_first_round_close_past_budget():
+def test_max_sim_seconds_stops_at_first_round_close_past_budget(make_engine):
     ref = make_engine(WaitForS(s=3), BiasedFedAvg())
     ref.run(20)
     budget = ref.round_log[4]["t_close"]    # exactly 5 rounds fit
@@ -120,10 +124,78 @@ def test_max_sim_seconds_stops_at_first_round_close_past_budget():
     assert hist.sim_seconds[-2] < budget
 
 
-def test_round0_all_devices_respond():
+def test_round0_all_devices_respond(make_engine):
     eng = make_engine(Impatient(), MIFA(memory="array"))
     rec = eng.run_round(0)
     assert rec["n_applied"] == N   # paper Remark 5.2: round 0 all active
+
+
+# --------------------------------------------------------------------------- #
+# edge cases: ties, zero latency, empty cohorts, exhausted traces
+# --------------------------------------------------------------------------- #
+
+def test_simultaneous_arrivals_resolve_fifo(make_engine):
+    """All devices arrive at the exact same instant: the heap must break
+    ties by push order (client id order at dispatch), deterministically."""
+    always_on = TraceParticipation(np.ones((1, N), bool))
+    lat = TraceLatency(np.full((1, N), 1.5))
+    logs = []
+    for _ in range(2):
+        eng = make_engine(WaitForAll(), BiasedFedAvg(),
+                          participation=always_on, latency=lat)
+        eng.run(3)
+        logs.append(list(eng.event_log))
+        arrivals = [e for e in eng.event_log if e[2] == "arrival"
+                    and e[4] == 1]
+        # one tie-broken arrival per device, in dispatch (client-id) order
+        assert [e[3] for e in arrivals] == list(range(N))
+        assert len({e[0] for e in arrivals}) == 1          # same timestamp
+        seqs = [e[1] for e in arrivals]
+        assert seqs == sorted(seqs)
+    assert logs[0] == logs[1]
+
+
+def test_zero_latency_devices_close_instantly(make_engine):
+    """RTT=0 for everyone: rounds close at dispatch time (duration 0) and
+    still apply every available device; only server overhead advances t."""
+    always_on = TraceParticipation(np.ones((1, N), bool))
+    lat = TraceLatency(np.zeros((1, N)))
+    cfg = SimConfig(epoch_s=4.0, server_overhead_s=0.25)
+    eng = make_engine(WaitForAll(), BiasedFedAvg(), participation=always_on,
+                      latency=lat, config=cfg)
+    _, hist = eng.run(4)
+    assert all(r["duration_s"] == 0.0 for r in eng.round_log)
+    assert all(r["n_applied"] == N for r in eng.round_log)
+    np.testing.assert_allclose(hist.sim_seconds,
+                               [0.0, 0.25, 0.5, 0.75])
+
+
+def test_deadline_with_empty_cohort(make_engine):
+    """cohort_size=0 dispatches nobody: the round must still close at the
+    deadline with zero applied updates instead of crashing or blocking."""
+    eng = make_engine(Deadline(deadline_s=1.0, cohort_size=0),
+                      BiasedFedAvg())
+    eng.run(3)
+    assert all(r["n_applied"] == 0 for r in eng.round_log)
+    assert all(r["n_dispatched"] == 0 for r in eng.round_log)
+    assert all(r["duration_s"] == pytest.approx(1.0) for r in eng.round_log)
+
+
+def test_trace_participation_exhaustion_mid_run(make_engine):
+    """A trace shorter than the simulated horizon clamps to its last row;
+    a device dark in that row never returns — WaitForAll must not block on
+    it past the lookahead, and later rounds apply N-1 devices."""
+    trace = np.ones((2, N), bool)
+    trace[1, 0] = False                      # device 0 dark from epoch 1 on
+    part = TraceParticipation(trace)
+    lat = TraceLatency(np.full((1, N), 0.5))
+    cfg = SimConfig(epoch_s=1.0, max_lookahead_epochs=25)
+    eng = make_engine(WaitForAll(), BiasedFedAvg(), participation=part,
+                      latency=lat, config=cfg)
+    eng.run(5)
+    assert eng.round_log[0]["n_applied"] == N            # forced round 0
+    assert all(r["n_applied"] == N - 1 for r in eng.round_log[2:])
+    assert np.isfinite(eng.now)
 
 
 # --------------------------------------------------------------------------- #
