@@ -1,7 +1,7 @@
 """MIFA server-aggregation throughput: fused kernel vs naive composition.
 
 The aggregation is memory-bound; the fused Pallas kernel halves HBM traffic
-(DESIGN.md kernels). On this CPU container we time the *jnp reference* and the
+(docs/architecture.md kernels). On this CPU container we time the *jnp reference* and the
 *fused-traffic jnp equivalent* (single-pass) and report the derived bytes
 moved; the Pallas kernel itself runs in interpret mode (correctness-only).
 """

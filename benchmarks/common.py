@@ -1,5 +1,5 @@
 """Shared benchmark utilities: the paper's experimental setup on synthetic
-non-iid data (DESIGN.md §6), timed-call helper, artifact IO."""
+non-iid data (docs/architecture.md §6), timed-call helper, artifact IO."""
 from __future__ import annotations
 
 import json

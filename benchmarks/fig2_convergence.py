@@ -4,7 +4,7 @@ with label-correlated Bernoulli availability, p_min in {0.1, 0.2}.
 
 Strongly convex run = logistic model (paper: MNIST/logistic);
 non-convex run = 2-layer MLP (paper: CIFAR-10/LeNet-5). Synthetic stand-ins —
-see DESIGN.md §6 for why and what transfers.
+see docs/architecture.md §6 for why and what transfers.
 
 Each algorithm's seed sweep runs through the vmapped fleet executor
 (`repro.fleet`) as ONE program instead of a Python loop over `run_fl` —

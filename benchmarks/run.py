@@ -15,6 +15,9 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
                      (repro.bank), vs the O(N·d) dense round
   fleet_scale      : vmapped K-trial sweep (repro.fleet) vs the sequential
                      run_fl loop — same trials, one program
+  scenario_grid    : algorithm × availability-scenario convergence grid
+                     (repro.scenarios): MIFA-vs-FedAvg gap under
+                     correlated / non-stationary availability
 """
 from __future__ import annotations
 
@@ -40,6 +43,7 @@ def main() -> None:
     import fig2_convergence
     import fleet_scale
     import roofline_bench
+    import scenario_grid
     import tau_stats
     import time_to_accuracy
 
@@ -53,6 +57,7 @@ def main() -> None:
         "time_to_accuracy": time_to_accuracy,
         "bank_scale": bank_scale,
         "fleet_scale": fleet_scale,
+        "scenario_grid": scenario_grid,
     }
     print("name,us_per_call,derived")
     failed = []

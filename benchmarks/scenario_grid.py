@@ -1,0 +1,243 @@
+"""Scenario convergence grid: algorithm × availability-scenario fleet sweep.
+
+The paper's theory makes no distributional assumption on A(t), but the
+related work (docs/scenarios.md) shows WHERE that generality pays:
+correlated and non-stationary availability is what breaks FedAvg-style
+baselines. This benchmark sweeps a `FleetSpec` grid of
+`seed × scenario × algorithm` — with availability sampled INSIDE the jitted
+round for dense algorithms (jit-native scenario surface; no (T, N) trace is
+ever materialised) — over scenarios ordered by increasing correlation /
+non-stationarity:
+
+    iid Bernoulli  →  Gilbert–Elliott (short bursts)  →  Gilbert–Elliott
+    (long bursts)  →  staged hard blackouts (non-stationary, but
+    Assumption 4 holds: deterministic bounded τ)  →  cluster-correlated
+    regional outages (correlated ACROSS devices, unbounded τ)
+
+The stochastic scenarios are calibrated to a ~0.5 mean activity rate so
+what varies along the axis is the correlation structure. Per cell we record
+final eval loss/accuracy (mean over seeds), rounds-to-target
+(time-to-accuracy in rounds), and per scenario the empirical τ statistics
+plus the `tau_bound()` theory classification. The headline table in
+benchmarks/artifacts/scenario_grid.md tracks the MIFA-vs-FedAvg gap as the
+scenario axis hardens.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+from common import ARTIFACTS, emit, paper_problem, save_artifact
+
+from repro.bank import BankedMIFA, DenseBank
+from repro.core import MIFA, BiasedFedAvg, FedAvgIS, tau_matrix
+from repro.fleet import Trial, make_fleet_eval, run_fleet
+from repro.optim import inv_t
+from repro.scenarios import make_scenario
+
+
+def scenario_axis(stage_len: int) -> list[tuple[str, str, dict]]:
+    """(label, registry name, kwargs) ordered by correlation strength.
+
+    All points are calibrated to ≈0.5 stationary activity so the axis
+    varies correlation/non-stationarity, not the participation budget.
+    """
+    return [
+        ("iid", "bernoulli", {"probs": 0.5}),
+        ("ge_burst4", "gilbert_elliott", {"rate": 0.5, "burst": 4.0}),
+        ("ge_burst16", "gilbert_elliott", {"rate": 0.5, "burst": 16.0}),
+        ("staged_blackout", "staged_blackout",
+         {"dark_frac": 0.5, "stage_len": stage_len}),
+        ("cluster", "cluster",
+         {"n_clusters": 4, "q_fail": 0.08, "q_recover": 0.08,
+          "p_device": 1.0}),
+    ]
+
+
+def scenario_tau_stats(scen, n_rounds: int) -> dict:
+    """Empirical τ statistics from the host surface + theory classification."""
+    sampler = scen.process.host_sampler()
+    masks = np.stack([sampler.sample(t) for t in range(n_rounds)])
+    tm = tau_matrix(masks)
+    tb = scen.process.tau_bound()
+    return {
+        "rate_empirical": float(masks.mean()),
+        "rate_stationary": float(scen.process.stationary_rate().mean()),
+        "tau_bar": float(tm.mean()),
+        "tau_max": int(tm.max()),
+        "assumption4_deterministic": bool(tb.deterministic),
+        "assumption4_t0": float(tb.t0),
+        "expected_tau": float(tb.expected_tau),
+        "tau_note": tb.note,
+    }
+
+
+def main(fast: bool = False) -> None:
+    n_clients = 20 if fast else 60
+    n_rounds = 30 if fast else 160
+    seeds = (0,) if fast else (0, 1, 2)
+    stage_len = max(n_rounds // 5, 4)
+
+    model, batcher, _probs, _mp, eval_fn = paper_problem(
+        "paper_logistic", n_clients=n_clients, n_per_class=120 if fast else 500)
+    fleet_eval = make_fleet_eval(model, eval_fn.eval_batch)
+    kw = dict(model=model, batcher=batcher, schedule=inv_t(1.0),
+              n_rounds=n_rounds, weight_decay=1e-3,
+              eval_every=max(n_rounds // 10, 1), eval_fn=fleet_eval,
+              cohort_capacity=None)
+
+    results: dict = {"n_clients": n_clients, "n_rounds": n_rounds,
+                     "seeds": list(seeds), "cells": []}
+    for label, name, kwargs in scenario_axis(stage_len):
+        scen0 = make_scenario(name, n=n_clients, seed=0, **kwargs)
+        tau = scenario_tau_stats(scen0, n_rounds)
+        # FedAvg-IS is told the STATIONARY marginals — the best any
+        # i.i.d.-assuming correction can do under correlated availability
+        is_probs = tuple(np.clip(scen0.process.stationary_rate(),
+                                 0.05, 1.0).tolist())
+        algos = {
+            "mifa": MIFA(memory="array"),
+            "banked_mifa": BankedMIFA(DenseBank()),
+            "fedavg": BiasedFedAvg(),
+            "fedavg_is": FedAvgIS(is_probs),
+        }
+        cell = {"scenario": label, "registry": name, "kwargs": kwargs,
+                "tau": tau, "algorithms": {}}
+        for aname, algo in algos.items():
+            trials = [Trial(seed=s,
+                            scenario=make_scenario(name, n=n_clients,
+                                                   seed=1000 + 17 * s,
+                                                   **kwargs),
+                            label=f"{label}/{aname}/seed{s}")
+                      for s in seeds]
+            t0 = time.time()
+            _, hist = run_fleet(algo=algo, trials=trials, **kw)
+            wall = time.time() - t0
+            losses = np.asarray(hist.eval_loss[-1][1], np.float64)
+            accs = np.asarray(hist.eval_acc[-1][1], np.float64)
+            cell["algorithms"][aname] = {
+                "final_loss_mean": float(losses.mean()),
+                "final_acc_mean": float(accs.mean()),
+                "final_loss_all": losses.tolist(),
+                "eval_curve_mean": [
+                    (int(t), float(np.mean(np.asarray(v))))
+                    for t, v in hist.eval_loss],
+                "wall_s": wall,
+            }
+            emit(f"scenario_grid/{label}/{aname}",
+                 wall / len(seeds) / n_rounds * 1e6,
+                 f"loss={losses.mean():.4f};acc={accs.mean():.4f}")
+        # rounds-to-target: the weakest algorithm's final loss — every
+        # stronger algorithm reaches it strictly earlier, so the column
+        # reads as "rounds to match the laggard's end state"
+        target = max(a["final_loss_mean"]
+                     for a in cell["algorithms"].values())
+        cell["target_loss"] = target
+        for aname, a in cell["algorithms"].items():
+            r = None
+            for t, loss in a["eval_curve_mean"]:
+                if loss <= target:
+                    r = t
+                    break
+            a["rounds_to_target"] = r
+        gap = (cell["algorithms"]["fedavg"]["final_loss_mean"]
+               - cell["algorithms"]["mifa"]["final_loss_mean"])
+        cell["mifa_fedavg_gap"] = gap
+        results["cells"].append(cell)
+
+    save_artifact("scenario_grid", results)
+    write_md(results)
+
+
+def write_md(results: dict) -> None:
+    """benchmarks/artifacts/scenario_grid.md — the headline table."""
+    cells = results["cells"]
+    lines = [
+        "# Scenario grid: MIFA vs baselines under correlated / "
+        "non-stationary availability",
+        "",
+        f"Fleet sweep (`repro.fleet` + `repro.scenarios`): "
+        f"N={results['n_clients']} clients, T={results['n_rounds']} rounds, "
+        f"seeds={results['seeds']}, logistic model on synthetic non-iid "
+        "data. Scenarios are ordered by increasing correlation / "
+        "non-stationarity and calibrated to ≈0.5 mean activity, so the "
+        "availability *budget* is constant along the axis — only its "
+        "structure changes. Dense algorithms sample availability inside "
+        "the jitted round (jit-native scenario surface); `banked_mifa` "
+        "uses the scenarios' host surface (identical masks). Regenerate "
+        "with `PYTHONPATH=src python benchmarks/run.py --only "
+        "scenario_grid` (see docs/benchmarks.md).",
+        "",
+        "| scenario | rate | τ̄ | τ_max | A4 regime | mifa loss | "
+        "banked loss | fedavg loss | fedavg-IS loss | fedavg−mifa gap |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        t = c["tau"]
+        a = c["algorithms"]
+        regime = ("deterministic τ≤" + f"{t['assumption4_t0']:.0f}"
+                  if t["assumption4_deterministic"] else "stochastic")
+        lines.append(
+            f"| {c['scenario']} | {t['rate_empirical']:.2f} | "
+            f"{t['tau_bar']:.2f} | {t['tau_max']} | {regime} | "
+            f"{a['mifa']['final_loss_mean']:.4f} | "
+            f"{a['banked_mifa']['final_loss_mean']:.4f} | "
+            f"{a['fedavg']['final_loss_mean']:.4f} | "
+            f"{a['fedavg_is']['final_loss_mean']:.4f} | "
+            f"{c['mifa_fedavg_gap']:+.4f} |")
+    lines += [
+        "",
+        "## Rounds to target loss (time-to-accuracy)",
+        "",
+        "Target per scenario = the weakest algorithm's final loss (rounds "
+        "to match the laggard's end state); `—` = never reached within "
+        "the round budget.",
+        "",
+        "| scenario | mifa | banked_mifa | fedavg | fedavg_is |",
+        "|---|---|---|---|---|",
+    ]
+    for c in cells:
+        row = [c["scenario"]]
+        for aname in ("mifa", "banked_mifa", "fedavg", "fedavg_is"):
+            r = c["algorithms"][aname]["rounds_to_target"]
+            row.append("—" if r is None else str(r))
+        lines.append("| " + " | ".join(row) + " |")
+    gaps = [c["mifa_fedavg_gap"] for c in cells]
+    widened = gaps[-1] > gaps[0]
+    lines += [
+        "",
+        "## Reading the axis",
+        "",
+        f"The FedAvg−MIFA final-loss gap moves from {gaps[0]:+.4f} (iid) "
+        f"to {gaps[-1]:+.4f} (cluster-correlated outages) across the axis "
+        f"({'widening' if widened else 'NOT widening — investigate'} with "
+        "correlation/non-stationarity). Under iid availability every "
+        "device reappears quickly (geometric τ with small mean), so "
+        "averaging the active cohort is nearly unbiased and MIFA's memory "
+        "buys little. As bursts lengthen (Gilbert–Elliott), a fixed "
+        "subpopulation is blacked out for entire stages "
+        "(staged_blackout), or whole clusters vanish for unbounded "
+        "stretches (cluster), the active cohort becomes a biased sample "
+        "of the fleet for many consecutive rounds; FedAvg drifts toward "
+        "the available clients' optimum while MIFA keeps every device's "
+        "last update in the average. The staged cell sits below cluster "
+        "in the ordering because its τ is deterministic and bounded "
+        "(Assumption 4 holds) and its recovery stage lets FedAvg "
+        "re-average the whole fleet; cluster outages are both "
+        "cross-device correlated and unbounded. FedAvg-IS re-weights by "
+        "the *stationary* marginals, which cannot express temporal "
+        "correlation — it recovers some of the gap under iid-like cells "
+        "and loses it as correlation grows.",
+        "",
+    ]
+    path = os.path.join(ARTIFACTS, "scenario_grid.md")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -1,4 +1,4 @@
-"""Sharded memory-bank subsystem: cohort-sized MIFA server state (DESIGN.md §3)."""
+"""Sharded memory-bank subsystem: cohort-sized MIFA server state (docs/architecture.md §3)."""
 from repro.bank.base import MemoryBank  # noqa: F401
 from repro.bank.dense import DenseBank  # noqa: F401
 from repro.bank.host import HostBank  # noqa: F401

@@ -9,7 +9,7 @@ a round touches only the active cohort A(t):
     scatter(state, ids, updates)  -> new state with those rows replaced
 
 and maintains the running sum  G_sum = Σ_i G^i  incrementally via the delta
-identity (DESIGN.md §3)
+identity (docs/architecture.md §3)
 
     G_sum += Σ_{a ∈ A} (u_a − G_old_a)
 
@@ -60,7 +60,8 @@ class MemoryBank:
         raise NotImplementedError
 
     def gather(self, state: dict, ids) -> Any:
-        """Stored rows for `ids` as an f32 pytree with leading axis len(ids)."""
+        """Read rows `ids` (C,) out of the bank `state`: an f32 pytree
+        with leading axis C = len(ids). Never mutates the state."""
         raise NotImplementedError
 
     def scatter(self, state: dict, ids, updates, *, valid=None,
@@ -95,12 +96,12 @@ class MemoryBank:
         if not self.jittable:
             raise NotImplementedError(
                 f"{type(self).__name__} is host-offloaded and excluded from "
-                "the vmapped fleet path (DESIGN.md §7); use DenseBank or run "
+                "the vmapped fleet path (docs/architecture.md §7); use DenseBank or run "
                 "trials sequentially")
 
     def gather_fleet(self, state: dict, ids) -> Any:
-        """Batched gather over stacked trial state: leaves (K, N+1, ...),
-        ids (K, C) -> rows (K, C, ...). Gather has no rng, so the vmapped
+        """Batched gather over stacked trial `state`: leaves (K, N+1, ...),
+        `ids` (K, C) -> rows (K, C, ...). Gather has no rng, so the vmapped
         per-trial gather is the correct default for any jittable backend."""
         self._require_fleet()
         import jax
@@ -108,10 +109,11 @@ class MemoryBank:
 
     def scatter_fleet(self, state: dict, ids, updates, *, valid=None,
                       rng=None) -> dict:
-        """Batched scatter over stacked trial state: ids/valid (K, C),
-        update leaves (K, C, ...). Jittable backends must override — rng
-        threading is backend-specific (a quantizing backend must give each
-        trial its OWN stream, never one shared key) — see DenseBank."""
+        """Batched scatter over stacked trial `state`: `ids`/`valid`
+        (K, C), `updates` leaves (K, C, ...) -> new stacked state, with
+        per-trial G_sum maintenance. Jittable backends must override —
+        `rng` threading is backend-specific (a quantizing backend must
+        give each trial its OWN stream, never one shared key): DenseBank."""
         self._require_fleet()
         raise NotImplementedError(
             f"{type(self).__name__} does not implement the batched fleet "

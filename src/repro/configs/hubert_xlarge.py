@@ -6,7 +6,7 @@ same backbone as wav2vec2. [arXiv:2106.07447]
 Per the brief, the mel-spectrogram + conv feature extractor is a STUB:
 ``input_specs`` provides frame embeddings (B, n_frames, d_model). Training is
 masked-frame cluster prediction over the 504-unit codebook. Encoder-only =>
-no decode shapes (DESIGN.md §4).
+no decode shapes (docs/architecture.md §4).
 """
 from repro.configs import ArchConfig
 

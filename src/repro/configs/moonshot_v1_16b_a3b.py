@@ -5,7 +5,7 @@ Assigned: 48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64e top-6
 
 Note: the assignment tags this [dense] but carries MoE fields; Moonlight-16B-A3B is a
 DeepSeek-V3-style MoE (16B total / 3B active), so we implement it as an MoE with
-64 routed experts, top-6, per-expert hidden 1408 (see DESIGN.md §4).
+64 routed experts, top-6, per-expert hidden 1408 (see docs/architecture.md §4).
 """
 from repro.configs import ArchConfig
 

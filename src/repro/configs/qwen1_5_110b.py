@@ -5,7 +5,7 @@ Assigned: 80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064, QKV bias.
 
 At 110B parameters this is the memory-limit case for MIFA's update array:
 K=1 local steps (no transient diverged client params), 2-D FSDP x TP param
-sharding, and the int8 update-memory option (DESIGN.md §3).
+sharding, and the int8 update-memory option (docs/architecture.md §3).
 """
 from repro.configs import ArchConfig
 
@@ -24,7 +24,7 @@ CONFIG = ArchConfig(
     fsdp=True,
     sequential_clients=True,
     inner_update_constraint=True,
-    param_dtype="bfloat16",   # HBM budget at 110B (DESIGN.md §3)
+    param_dtype="bfloat16",   # HBM budget at 110B (docs/architecture.md §3)
     memory_dtype="bfloat16",  # paper-faithful; int8 variant benchmarked separately
     source="hf:Qwen/Qwen1.5-0.5B",
 )

@@ -7,7 +7,7 @@ carry a leading client axis (N, *param_shape) sharded client→data. Each round:
           = (w_t − w^i_{t,K}) / η_t    if i ∈ A(t)      (fresh K-step update)
     w_{t+1} = w_t − η_t · (1/N) Σ_i G^i_t
 
-Three dense memory layouts (DESIGN.md §3):
+Three dense memory layouts (docs/architecture.md §3):
   * "array"  — paper-faithful float update array (fp32/bf16).
   * "delta"  — the paper's §4 memory-efficient variant: server keeps only the
     running mean Ḡ; per-client previous updates are separate state (on-device

@@ -49,6 +49,7 @@ class BernoulliParticipation:
         self.rng = np.random.default_rng(seed)
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) bool mask for round t (round 0 is forced all-active)."""
         if t == 0:
             return np.ones(self.n, bool)
         return self.rng.random(self.n) < self.probs
@@ -72,6 +73,7 @@ class AdversarialParticipation:
         assert np.all(self.offs < self.periods)
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) bool mask for round t (round 0 is forced all-active)."""
         if t == 0:
             return np.ones(self.n, bool)
         ph = (t + self.phases) % self.periods
@@ -79,6 +81,9 @@ class AdversarialParticipation:
 
 
 class TraceParticipation:
+    """Replay a recorded (T, N) availability matrix; rounds past the end
+    repeat the last row. Row 0 is forced all-active (on a copy)."""
+
     def __init__(self, trace: np.ndarray):
         # copy: np.asarray can alias the input, and we overwrite row 0 below
         self.trace = np.array(trace, bool, copy=True)
@@ -86,6 +91,7 @@ class TraceParticipation:
         self.n = self.trace.shape[1]
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) bool mask for round t (clamped to the trace length)."""
         return self.trace[min(t, len(self.trace) - 1)]
 
 
@@ -93,11 +99,34 @@ class TraceParticipation:
 # τ statistics
 # --------------------------------------------------------------------------- #
 
+def _check_first_round(active: np.ndarray, strict: bool, what: str) -> None:
+    """Definition 5.1's τ(t,i) = t − max{t' <= t : i ∈ A(t')} is undefined
+    when a device has never been active; the paper closes the gap by
+    assuming every device responds at round 0 (Remark 5.2 / Definition
+    5.2(1)). These statistics used to *silently* assume that; now they
+    raise unless `strict=False`, which opts into the documented init
+    convention: devices are treated as active at a virtual round −1 (the
+    server memory's zero init), so τ(0, i) = 1 for a round-0 absentee."""
+    if strict and not np.all(active):
+        missing = np.flatnonzero(~np.asarray(active, bool))[:8].tolist()
+        raise ValueError(
+            f"{what}: round 0 must be all-active (Definition 5.2(1)); "
+            f"devices {missing}... are inactive. Pass strict=False to use "
+            "the init convention (τ counts from a virtual round −1).")
+
+
 @dataclass
 class TauStats:
-    """Streaming tracker of the paper's inactivity statistics."""
+    """Streaming tracker of the paper's inactivity statistics.
+
+    `strict` (default True) raises if the first recorded round is not
+    all-active — see `_check_first_round`. `RoundRunner` constructs its
+    tracker with strict=False because simulator round policies (e.g.
+    `sim.policies.Deadline`) legitimately drop round-0 responders.
+    """
 
     n: int
+    strict: bool = True
 
     def __post_init__(self):
         self.tau = np.zeros(self.n, np.int64)         # current τ(t, i)
@@ -113,6 +142,9 @@ class TauStats:
         """Call once per round *with the round's availability mask* (after the
         mask is applied: τ=0 for active devices). `sim_time` stamps the round
         with simulated seconds (runtime-simulator runs)."""
+        if self.rounds == 0:
+            _check_first_round(np.asarray(active, bool), self.strict,
+                               "TauStats.update")
         self.tau = np.where(active, 0, self.tau + 1)
         self.tau_max_per_dev = np.maximum(self.tau_max_per_dev, self.tau)
         self.sum_tau += float(self.tau.sum())
@@ -135,29 +167,41 @@ class TauStats:
 
     # Definition 5.1 quantities over the rounds seen so far
     @property
-    def tau_bar(self) -> float:           # τ̄_T
+    def tau_bar(self) -> float:
+        """τ̄_T: mean τ(t,i) over all rounds × devices seen so far."""
         return self.sum_tau / max(self.rounds * self.n, 1)
 
     @property
-    def tau_max(self) -> int:             # τ_max,T
+    def tau_max(self) -> int:
+        """τ_max,T: the largest τ(t,i) seen by any device."""
         return int(self.tau_max_per_dev.max(initial=0))
 
     @property
-    def d_bar(self) -> float:             # \bar d_T (App. C)
+    def d_bar(self) -> float:
+        """\\bar d_T (App. C): mean of τ(t,i)² over rounds × devices."""
         return self.sum_tau_sq / max(self.rounds * self.n, 1)
 
     @property
-    def d_max_bar(self) -> float:         # \bar d_max,T (App. B)
+    def d_max_bar(self) -> float:
+        """\\bar d_max,T (App. B): mean over devices of (max_t τ(t,i))²."""
         return float((self.tau_max_per_dev.astype(np.float64) ** 2).mean())
 
     @property
-    def tau_max_bar(self) -> float:       # \bar τ_max,T (App. C)
+    def tau_max_bar(self) -> float:
+        """\\bar τ_max,T (App. C): mean over devices of max_t τ(t,i)."""
         return float(self.tau_max_per_dev.astype(np.float64).mean())
 
 
-def tau_matrix(masks: np.ndarray) -> np.ndarray:
-    """masks (T, N) bool -> τ(t,i) matrix (T, N)."""
+def tau_matrix(masks: np.ndarray, *, strict: bool = True) -> np.ndarray:
+    """masks (T, N) bool -> τ(t,i) matrix (T, N).
+
+    Raises if masks[0] is not all-active (the paper's Definition 5.2(1)
+    convention that makes τ well defined); pass strict=False to fall back
+    to the init convention (see `_check_first_round`)."""
+    masks = np.asarray(masks, bool)
     T, N = masks.shape
+    if T:
+        _check_first_round(masks[0], strict, "tau_matrix")
     tau = np.zeros((T, N), np.int64)
     cur = np.zeros(N, np.int64)
     for t in range(T):

@@ -7,7 +7,7 @@ the true update — preserving the bias-correction property MIFA's analysis
 relies on (Assumption 2 asks for unbiased gradients; stochastic rounding adds
 zero-mean bounded noise, effectively enlarging σ² slightly).
 
-Cuts the qwen1.5-110b update array from 13.75 -> 3.44 GB/chip (DESIGN.md §3).
+Cuts the qwen1.5-110b update array from 13.75 -> 3.44 GB/chip (docs/architecture.md §3).
 Also the quantizer behind `repro.bank.Int8PagedBank`, which adds lazy paging
 on top of the same per-row int8 + absmax-scale layout.
 """

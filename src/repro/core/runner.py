@@ -42,6 +42,7 @@ class FLHistory:
     tau_max: int = 0
 
     def as_dict(self) -> dict:
+        """Plain-dict view of every history field (JSON-serialisable)."""
         return {k: getattr(self, k) for k in
                 ("rounds", "train_loss", "eval_loss", "eval_acc", "n_active",
                  "global_updates", "sim_seconds", "eval_seconds", "wall_time",
@@ -49,6 +50,8 @@ class FLHistory:
 
     def record_round(self, t: int, metrics: dict,
                      sim_time: float | None = None) -> None:
+        """Append round t's metrics dict (loss, n_active, optional
+        global_updates); `sim_time` stamps it with simulated seconds."""
         self.rounds.append(t)
         self.train_loss.append(float(metrics["loss"]))
         self.n_active.append(float(metrics["n_active"]))
@@ -59,6 +62,8 @@ class FLHistory:
 
     def record_eval(self, t: int, eval_loss: float, eval_acc: float,
                     sim_time: float | None = None) -> None:
+        """Append an (round, value) eval point; `sim_time` additionally
+        stamps it on the simulated-seconds axis (eval_seconds)."""
         self.eval_loss.append((t, float(eval_loss)))
         self.eval_acc.append((t, float(eval_acc)))
         if sim_time is not None:
@@ -118,6 +123,31 @@ def apply_mean(params, mean_g, eta_srv):
         lambda w, g: (w - eta_srv * g).astype(w.dtype), params, mean_g)
 
 
+def make_scenario_round_fn(model, algo, k_steps: int, weight_decay: float,
+                           scen_fn):
+    """One dense round with availability sampled INSIDE the program.
+
+    Wraps `make_dense_round_fn` so the (N,) mask comes from a scenario's
+    jit-native surface (`scenarios.AvailabilityProcess.sample_fn`) instead
+    of the host: (state, params, batch, scen_state, t, scen_key, eta_loc,
+    eta_srv, rng) -> (state, params, metrics, scen_state, mask). `t` is a
+    traced int32 scalar (no retrace per round); the returned mask feeds τ
+    statistics on the host. The fleet executor vmaps the same composition
+    over the trial axis — availability sweeps never materialise a (T, N)
+    trace.
+    """
+    base = make_dense_round_fn(model, algo, k_steps, weight_decay)
+
+    def round_fn(state, params, batch, scen_state, t, scen_key, eta_loc,
+                 eta_srv, rng):
+        mask, scen_state = scen_fn(scen_key, t, scen_state)
+        state, params, metrics = base(state, params, batch, mask, eta_loc,
+                                      eta_srv, rng)
+        return state, params, metrics, scen_state, mask
+
+    return round_fn
+
+
 def make_cohort_round_fn(model, algo, k_steps: int, weight_decay: float):
     """One whole cohort round (local updates + bank scatter + server step)
     as a pure function — jittable banks only.
@@ -166,7 +196,7 @@ class RoundRunner:
                  eta_local: Callable | float | None = None,
                  weight_decay: float = 0.0, seed: int = 0,
                  params=None, uses_update_clock: bool = False,
-                 cohort_capacity: int | None = None):
+                 cohort_capacity: int | None = None, scenario=None):
         self.model = model
         self.algo = algo
         self.batcher = batcher
@@ -178,9 +208,12 @@ class RoundRunner:
         self.params = model.init(self.rng) if params is None else params
         self.n_clients = batcher.n_clients
         self.state = algo.init_state(self.params, self.n_clients)
-        self.stats = TauStats(self.n_clients)
+        # strict=False: simulator round policies (Deadline) legitimately
+        # drop round-0 responders — the init convention applies there
+        self.stats = TauStats(self.n_clients, strict=False)
         self.hist = FLHistory()
         self.cohort_mode = getattr(algo, "cohort_based", False)
+        self._init_scenario(scenario, weight_decay)
 
         if self.cohort_mode:
             self.cohort_updates_fn = jax.jit(make_cohort_update_fn(
@@ -201,6 +234,35 @@ class RoundRunner:
             self.round_fn = jax.jit(make_dense_round_fn(
                 model, algo, batcher.k_steps, weight_decay))
 
+    def _init_scenario(self, scenario, weight_decay: float) -> None:
+        """Wire a `repro.scenarios` scenario (or bare process) in.
+
+        Dense algorithms get the jit-native surface: availability is
+        sampled inside the jitted round (`make_scenario_round_fn`), keyed
+        by the scenario's own PRNG stream. Cohort algorithms need the mask
+        on the host to assemble compact batches, so they fall back to the
+        scenario's host surface — identical masks either way.
+        """
+        self.scenario_round_fn = None
+        self._scen_sampler = None
+        if scenario is None:
+            self.scen_process = None
+            return
+        from repro.scenarios.base import as_process
+        proc = as_process(scenario)
+        assert proc.n == self.n_clients, (proc.n, self.n_clients)
+        self.scen_process = proc
+        if self.cohort_mode:
+            self._scen_sampler = proc.host_sampler()
+        else:
+            self.scenario_round_fn = jax.jit(
+                make_scenario_round_fn(self.model, self.algo,
+                                       self.batcher.k_steps, weight_decay,
+                                       proc.sample_fn()),
+                donate_argnums=(0,))
+            self.scen_state = proc.init_state()
+            self.scen_key = proc.key
+
     def learning_rates(self, t: int) -> tuple[float, float]:
         """η_local, η_server for round t (update-clock aware)."""
         if self.uses_update_clock and "t_updates" in self.state:
@@ -218,7 +280,9 @@ class RoundRunner:
 
     def step(self, t: int, active: np.ndarray,
              sim_time: float | None = None) -> dict:
-        """Apply one round with `active` as the applied-update mask."""
+        """Apply one round with `active` (N,) bool as the applied-update
+        mask; `sim_time` stamps it with simulated seconds. Returns the
+        round's metrics dict."""
         self.stats.update(np.asarray(active, bool), sim_time=sim_time)
         if self.cohort_mode:
             ids = np.flatnonzero(np.asarray(active, bool))
@@ -232,9 +296,34 @@ class RoundRunner:
         self.hist.record_round(t, metrics, sim_time=sim_time)
         return metrics
 
+    def step_scenario(self, t: int, sim_time: float | None = None) -> dict:
+        """Apply one round with availability drawn BY the scenario.
+
+        Dense path: the mask is sampled inside the jitted round function
+        (device-side, no host trace) and returned only for τ statistics.
+        Cohort path: the scenario's host surface draws the same mask and
+        the round goes through `step` unchanged.
+        """
+        assert self.scen_process is not None, \
+            "construct RoundRunner(scenario=...) to use step_scenario"
+        if self.scenario_round_fn is None:        # cohort: host surface
+            return self.step(t, self._scen_sampler.sample(t),
+                             sim_time=sim_time)
+        batch = self.batcher.sample_round(t)
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rng, sub = jax.random.split(self.rng)
+        (self.state, self.params, metrics, self.scen_state,
+         mask) = self.scenario_round_fn(
+            self.state, self.params, batch, self.scen_state, jnp.int32(t),
+            self.scen_key, jnp.float32(eta_loc), jnp.float32(eta_srv), sub)
+        self.stats.update(np.asarray(mask, bool), sim_time=sim_time)
+        self.hist.record_round(t, metrics, sim_time=sim_time)
+        return metrics
+
     def step_cohort(self, t: int, ids: np.ndarray,
                     sim_time: float | None = None) -> dict:
-        """Apply one O(|A|·d) cohort round; `ids` are the active client rows.
+        """Apply one O(|A|·d) cohort round; `ids` are the active client
+        rows, `sim_time` the optional simulated-seconds stamp.
 
         Called directly (million-client drivers), τ statistics are skipped —
         TauStats is itself O(N) per round. `step` keeps them.
@@ -274,18 +363,21 @@ class RoundRunner:
 
     def evaluate(self, t: int, eval_fn: Callable,
                  sim_time: float | None = None) -> tuple[float, float]:
+        """Run `eval_fn(params) -> (loss, acc)` and record it at round t."""
         el, ea = eval_fn(self.params)
         self.hist.record_eval(t, el, ea, sim_time=sim_time)
         return float(el), float(ea)
 
     def finalize(self) -> tuple[Any, FLHistory]:
+        """Seal τ statistics into the history; returns (params, history)."""
         self.hist.tau_bar = self.stats.tau_bar
         self.hist.tau_max = self.stats.tau_max
         return self.params, self.hist
 
 
-def run_fl(*, model, algo, participation, batcher, schedule: Callable,
-           n_rounds: int, eta_local: Callable | float | None = None,
+def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
+           participation=None, scenario=None,
+           eta_local: Callable | float | None = None,
            weight_decay: float = 0.0, seed: int = 0,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
@@ -293,26 +385,47 @@ def run_fl(*, model, algo, participation, batcher, schedule: Callable,
            verbose: bool = False) -> tuple[Any, FLHistory]:
     """Run T round-synchronous rounds of federated training.
 
-    batcher.sample_round(t) -> batch pytree with leaves (N, K, mb, ...).
-    schedule(t) -> server/local learning rate η_t (paper uses the same for both).
-    cohort_capacity pins the cohort-path pad width (default: per-round pow-2
-    buckets). Pad slots are mathematically inert either way, but fp32
-    reduction *grouping* depends on the padded length — pin the capacity when
-    comparing trajectories bit-for-bit across drivers (see tests/test_fleet).
+    Availability comes from exactly one of:
+      * participation — legacy host process (``.sample(t) -> (N,) bool``);
+        one draw per round on the host, mask streamed into the jitted round.
+      * scenario — a `repro.scenarios` Scenario/process; dense algorithms
+        sample the mask INSIDE the jitted round (jit-native surface),
+        cohort algorithms use the scenario's host surface (same masks).
+
+    `model` supplies init/loss/accuracy; batcher.sample_round(t) -> batch
+    pytree with leaves (N, K, mb, ...); schedule(t) -> server learning rate
+    η_t for each of the `n_rounds` rounds (`eta_local` overrides the
+    client-side rate; the paper uses the same for both). `seed` keys model
+    init and the round RNG (or pass `params` to skip init);
+    `weight_decay` applies to the K local SGD steps. `eval_fn(params) ->
+    (loss, acc)` runs every `eval_every` rounds; `uses_update_clock` drives
+    schedules off applied global updates instead of rounds
+    (FedAvgSampling-style). cohort_capacity pins the cohort-path pad width
+    (default: per-round pow-2 buckets). Pad slots are mathematically inert
+    either way, but fp32 reduction *grouping* depends on the padded
+    length — pin the capacity when comparing trajectories bit-for-bit
+    across drivers (see tests/test_fleet).
     """
+    if (participation is None) == (scenario is None):
+        raise ValueError("pass exactly one of participation= or scenario=")
     runner = RoundRunner(model=model, algo=algo, batcher=batcher,
                          schedule=schedule, eta_local=eta_local,
                          weight_decay=weight_decay, seed=seed, params=params,
                          uses_update_clock=uses_update_clock,
-                         cohort_capacity=cohort_capacity)
+                         cohort_capacity=cohort_capacity, scenario=scenario)
     t0 = time.time()
     for t in range(n_rounds):
-        active = participation.sample(t)
-        runner.step(t, active)
+        if scenario is not None:
+            metrics = runner.step_scenario(t)
+            n_active = int(metrics["n_active"])
+        else:
+            active = participation.sample(t)
+            runner.step(t, active)
+            n_active = int(active.sum())
         if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
             el, ea = runner.evaluate(t, eval_fn)
             if verbose:
                 print(f"  round {t:5d} train={runner.hist.train_loss[-1]:.4f} "
-                      f"eval={el:.4f} acc={ea:.4f} active={int(active.sum())}")
+                      f"eval={el:.4f} acc={ea:.4f} active={n_active}")
     runner.hist.wall_time = time.time() - t0
     return runner.finalize()

@@ -1,4 +1,4 @@
-"""Synthetic datasets (the container is offline; see DESIGN.md §6).
+"""Synthetic datasets (the container is offline; see docs/architecture.md §6).
 
 `make_classification` builds a Gaussian-prototype mixture that structurally
 matches the paper's image-classification tasks: C classes, per-class prototype

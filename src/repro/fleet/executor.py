@@ -17,16 +17,22 @@ batched Pallas kernel `kernels.bank_scatter_batched`). Per trial the fleet
 is therefore bit-exactly the trajectory `run_fl` produces — property-tested
 in tests/test_fleet.py.
 
-What is and is not vmappable (DESIGN.md §7):
+What is and is not vmappable (docs/architecture.md §7):
   * dense algorithms (MIFA array/delta/int8, FedAvg baselines)   — yes
   * BankedMIFA over DenseBank (jittable)                         — yes
   * BankedMIFA over HostBank / Int8PagedBank (host-offloaded)    — no; these
     live outside jit by design, run those trials sequentially.
 
-Host environment stays per-trial and un-vmapped: participation processes
-draw each trial's mask on the host exactly as `run_fl` would, and cohort
-batches are assembled per trial then stacked. The trial axis can be sharded
-over the mesh's data axes (`sharding.rules.fleet_trial_specs`).
+The availability environment comes in two flavours. Legacy participation
+processes stay per-trial and un-vmapped: each trial's (N,) mask is drawn on
+the host exactly as `run_fl` would draw it. `repro.scenarios` trials
+instead carry a jit-native process whose state (Markov chains, drifting
+rates — parameters included) stacks along the trial axis, and the mask is
+sampled INSIDE the vmapped round function (`step_scenario`): sweeping
+`seed × scenario × algorithm` never materialises a (T, N) trace or loops
+over trials on the host. Cohort batches are assembled per trial then
+stacked. The trial axis can be sharded over the mesh's data axes
+(`sharding.rules.fleet_trial_specs`).
 """
 from __future__ import annotations
 
@@ -39,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runner import (FLHistory, _pow2_bucket, apply_mean,
-                               make_cohort_update_fn, make_dense_round_fn)
+                               make_cohort_update_fn, make_dense_round_fn,
+                               make_scenario_round_fn)
 from repro.fleet.spec import FleetSpec, Trial
 
 
@@ -62,6 +69,7 @@ class FleetHistory:
     wall_time: float = 0.0
 
     def record_round(self, t: int, metrics: dict) -> None:
+        """Append round t's (K,) metric vectors (loss, n_active, ...)."""
         self.rounds.append(t)
         self.train_loss.append(np.asarray(metrics["loss"], np.float64))
         self.n_active.append(np.asarray(metrics["n_active"], np.float64))
@@ -70,6 +78,7 @@ class FleetHistory:
                 np.asarray(metrics["global_updates"], np.float64))
 
     def record_eval(self, t: int, eval_loss, eval_acc) -> None:
+        """Append an eval point: (round, (K,) losses) and (round, (K,) accs)."""
         self.eval_loss.append((t, np.asarray(eval_loss, np.float64)))
         self.eval_acc.append((t, np.asarray(eval_acc, np.float64)))
 
@@ -89,6 +98,7 @@ class FleetHistory:
         return out
 
     def trial(self, k: int) -> FLHistory:
+        """Trial k's view as a plain `FLHistory` (scalars, not (K,) rows)."""
         h = FLHistory()
         h.rounds = list(self.rounds)
         h.train_loss = [float(v[k]) for v in self.train_loss]
@@ -114,7 +124,8 @@ class FleetRunner:
                  seeds: Sequence[int], eta_local: Callable | float | None = None,
                  weight_decay: float = 0.0, uses_update_clock: bool = False,
                  cohort_capacity: int | None = None,
-                 labels: Sequence[str] | None = None, mesh=None, cfg=None):
+                 labels: Sequence[str] | None = None, mesh=None, cfg=None,
+                 scenarios: Sequence | None = None):
         self.model = model
         self.algo = algo
         self.batcher = batcher
@@ -168,8 +179,48 @@ class FleetRunner:
                 donate_argnums=(0,))
             self.cohort_round_fn = None
 
+        self._init_scenarios(scenarios, weight_decay)
         if mesh is not None:
             self._shard_trial_axis(mesh, cfg)
+
+    def _init_scenarios(self, scenarios, weight_decay: float) -> None:
+        """Wire per-trial `repro.scenarios` processes into the fleet.
+
+        Dense groups sample availability INSIDE the vmapped round: each
+        trial's scenario state (chain state + parameters) stacks along the
+        trial axis and the shared pure sample function runs under the same
+        jit as the round — no (T, N) trace, no per-trial host loop. Cohort
+        groups (compact batches need the mask on the host) fall back to the
+        scenarios' host surfaces, which draw identical masks.
+        """
+        self.scen_round_fn = None
+        self._scen_samplers = None
+        if scenarios is None:
+            return
+        from repro.scenarios.base import as_process
+        procs = [as_process(s) for s in scenarios]
+        assert len(procs) == self.n_trials, (len(procs), self.n_trials)
+        if any(type(p) is not type(procs[0]) for p in procs):
+            raise ValueError(
+                "all trials in one fleet group must share a scenario type "
+                "(one pure sample function per vmapped program); got "
+                f"{sorted({type(p).__name__ for p in procs})} — split the "
+                "sweep into one FleetSpec per type")
+        for p in procs:
+            assert p.n == self.n_clients, (p.n, self.n_clients)
+        if self.cohort_mode:
+            self._scen_samplers = [p.host_sampler() for p in procs]
+            return
+        scen_round = make_scenario_round_fn(
+            self.model, self.algo, self.batcher.k_steps, weight_decay,
+            procs[0].sample_fn())
+        self.scen_round_fn = jax.jit(
+            jax.vmap(scen_round,
+                     in_axes=(0, 0, None, 0, None, 0, 0, 0, 0)),
+            donate_argnums=(0,))
+        self.scen_state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *[p.init_state() for p in procs])
+        self.scen_keys = jnp.stack([p.key for p in procs])
 
     def _shard_trial_axis(self, mesh, cfg) -> None:
         from jax.sharding import NamedSharding
@@ -222,6 +273,30 @@ class FleetRunner:
         self.state, self.params, metrics = self.round_fn(
             self.state, self.params, batch, jnp.asarray(masks),
             jnp.asarray(eta_loc), jnp.asarray(eta_srv), subs)
+        self.hist.record_round(t, metrics)
+        return metrics
+
+    def step_scenario(self, t: int) -> dict:
+        """Apply round t with availability drawn BY each trial's scenario.
+
+        Dense groups: masks are sampled inside the jitted, vmapped round —
+        one program computes K masks, K cohorts of local updates, and K
+        server steps. Cohort groups: the scenarios' host surfaces draw the
+        same (K, N) masks and the round goes through `step` unchanged.
+        """
+        if self._scen_samplers is not None:        # cohort: host surface
+            masks = np.stack([s.sample(t) for s in self._scen_samplers])
+            return self.step(t, masks)
+        assert self.scen_round_fn is not None, \
+            "construct FleetRunner(scenarios=...) to use step_scenario"
+        batch = self.batcher.sample_round(t)
+        eta_loc, eta_srv = self.learning_rates(t)
+        self.rngs, subs = self._split()
+        (self.state, self.params, metrics, self.scen_state,
+         _masks) = self.scen_round_fn(
+            self.state, self.params, batch, self.scen_state, jnp.int32(t),
+            self.scen_keys, jnp.asarray(eta_loc), jnp.asarray(eta_srv),
+            subs)
         self.hist.record_round(t, metrics)
         return metrics
 
@@ -284,6 +359,7 @@ class FleetRunner:
         return el, ea
 
     def finalize(self) -> tuple[Any, FleetHistory]:
+        """Returns (stacked (K, ...) params, fleet history)."""
         return self.params, self.hist
 
 
@@ -312,10 +388,30 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
     """Run T rounds of K independent trials as one vmapped program.
 
     The K-trial counterpart of `core.runner.run_fl`: pass a `FleetSpec`
-    (algo + trials + clock flag), or `algo` + `trials` explicitly. Each
-    trial's participation process draws its own (N,) mask per round on the
-    host; everything device-side carries the trial axis. `eval_fn` consumes
-    stacked params and returns (K,) losses/accs (see `make_fleet_eval`).
+    (algo + trials + clock flag), or `algo` + `trials` explicitly.
+
+    Args:
+      model, batcher, schedule: shared problem — batcher.sample_round(t)
+        yields the round's batch pytree; schedule(t) the server LR for
+        each of the `n_rounds` rounds (`eta_local` overrides the client
+        rate; `weight_decay` applies to the local steps;
+        `uses_update_clock` drives schedules off applied global updates;
+        `cohort_capacity` pins the cohort pad width).
+      spec: FleetSpec carrying algo/trials/clock/capacity (or pass `algo`
+        and `trials` explicitly).
+      trials: `Trial` list. Trials with `participation` draw each round's
+        (N,) mask on the host exactly as `run_fl` would; trials with
+        `scenario` sample availability INSIDE the jitted round for dense
+        algorithms (cohort algorithms use the scenario's host surface) —
+        no (T, N) trace is ever materialised. One group must be all-
+        participation or all-scenario.
+      eval_fn: consumes stacked (K, ...) params, returns ((K,) losses,
+        (K,) accs) — see `make_fleet_eval`. Runs every `eval_every` rounds.
+      mesh, cfg: optional mesh to shard the trial axis over
+        (`sharding.rules.fleet_trial_specs`).
+
+    Returns:
+      (stacked params with leading (K,) axis, `FleetHistory`).
     """
     if spec is not None:
         algo = spec.algo
@@ -323,18 +419,26 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
         uses_update_clock = spec.uses_update_clock
         cohort_capacity = spec.cohort_capacity or cohort_capacity
     assert algo is not None and trials, "need a FleetSpec or algo + trials"
+    n_scen = sum(tr.scenario is not None for tr in trials)
+    if n_scen not in (0, len(trials)):
+        raise ValueError("mixing scenario and participation trials in one "
+                         "fleet group is not supported")
     runner = FleetRunner(
         model=model, algo=algo, batcher=batcher, schedule=schedule,
         seeds=[tr.seed for tr in trials], eta_local=eta_local,
         weight_decay=weight_decay, uses_update_clock=uses_update_clock,
         cohort_capacity=cohort_capacity,
         labels=[tr.label or f"seed{tr.seed}" for tr in trials],
-        mesh=mesh, cfg=cfg)
+        mesh=mesh, cfg=cfg,
+        scenarios=[tr.scenario for tr in trials] if n_scen else None)
     parts = [tr.participation for tr in trials]
     t0 = time.time()
     for t in range(n_rounds):
-        masks = np.stack([np.asarray(p.sample(t), bool) for p in parts])
-        runner.step(t, masks)
+        if n_scen:
+            runner.step_scenario(t)
+        else:
+            masks = np.stack([np.asarray(p.sample(t), bool) for p in parts])
+            runner.step(t, masks)
         if eval_fn is not None and (t % eval_every == 0 or t == n_rounds - 1):
             el, ea = runner.evaluate(t, eval_fn)
             if verbose:

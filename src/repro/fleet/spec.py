@@ -35,11 +35,27 @@ from typing import Any, Callable, Sequence
 
 @dataclass(frozen=True)
 class Trial:
-    """One independent FL run inside a fleet group."""
+    """One independent FL run inside a fleet group.
+
+    Availability comes from exactly one of:
+      * participation — legacy host-side process (``.sample(t) -> (N,)``);
+        the driver draws each round's mask on the host.
+      * scenario — a `repro.scenarios` process/Scenario; dense fleet groups
+        sample the mask INSIDE the vmapped jitted round (no host trace),
+        cohort groups use the scenario's host surface. All trials in one
+        group must share the scenario *type* (one pure sample function);
+        per-trial parameters and chain state batch along the trial axis.
+    """
 
     seed: int
-    participation: Any            # host-side process with .sample(t) -> (N,)
+    participation: Any = None     # host-side process with .sample(t) -> (N,)
+    scenario: Any = None          # repro.scenarios process or Scenario
     label: str = ""
+
+    def __post_init__(self):
+        if (self.participation is None) == (self.scenario is None):
+            raise ValueError(
+                "Trial needs exactly one of participation= or scenario=")
 
 
 @dataclass
@@ -54,18 +70,22 @@ class FleetSpec:
 
     @property
     def n_trials(self) -> int:
+        """K — the number of trials batched into this group."""
         return len(self.trials)
 
     @property
     def seeds(self) -> tuple:
+        """Per-trial init/RNG seeds, in trial order."""
         return tuple(t.seed for t in self.trials)
 
     @property
     def participations(self) -> tuple:
+        """Per-trial participation processes (None for scenario trials)."""
         return tuple(t.participation for t in self.trials)
 
     @property
     def labels(self) -> list[str]:
+        """Per-trial display labels, in trial order."""
         return [t.label for t in self.trials]
 
 
@@ -74,39 +94,60 @@ def _avail_tag(kwargs: dict) -> str:
 
 
 def expand_grid(*, algos: dict[str, Any], seeds: Sequence[int],
-                make_participation: Callable,
+                make_participation: Callable | None = None,
+                make_scenario: Callable | None = None,
                 avail_grid: Sequence[dict] = ({},),
                 clock: Sequence[str] = (),
                 cohort_capacity: int | None = None) -> list[FleetSpec]:
     """Expand (algorithm × seed × availability point) into FleetSpecs.
 
-    algos: name -> algorithm instance, or name -> callable taking the
-      availability kwargs and returning an instance (for algorithms whose
-      static config depends on the point, e.g. FedAvgIS). Instances get one
-      spec with seeds × avail_grid trials; callables get one spec PER grid
-      point (seeds only batch).
-    make_participation: (seed=..., **avail_kwargs) -> participation process.
-    clock: algo names that use the update clock (FedAvgSampling-style).
+    Args:
+      algos: name -> algorithm instance, or name -> callable taking the
+        availability kwargs and returning an instance (for algorithms whose
+        static config depends on the point, e.g. FedAvgIS). Instances get
+        one spec with seeds × avail_grid trials; callables get one spec PER
+        grid point (seeds only batch).
+      seeds: model-init/RNG seeds; each becomes one trial per grid point.
+      make_participation: ``(seed=..., **avail_kwargs) -> host process``
+        (legacy surface). Exactly one of this and `make_scenario`.
+      make_scenario: ``(seed=..., **avail_kwargs) -> scenario process`` —
+        trials carry `Trial.scenario` and dense groups sample availability
+        inside the vmapped round (jit-native surface). Scenario *types*
+        must not vary across one spec's grid points (one pure function per
+        vmapped program); sweep types via separate expand_grid calls.
+      avail_grid: availability parameter points (dicts of kwargs).
+      clock: algo names that use the update clock (FedAvgSampling-style).
+      cohort_capacity: pinned cohort pad width for cohort algorithms.
+
+    Returns:
+      One `FleetSpec` per algorithm (or per (algorithm, point) for
+      callable algos), each runnable as ONE vmapped program.
     """
+    if (make_participation is None) == (make_scenario is None):
+        raise ValueError(
+            "pass exactly one of make_participation= or make_scenario=")
+
+    def _trial(s: int, av: dict, name: str) -> Trial:
+        label = f"{name}/{_avail_tag(av)}/seed{s}"
+        if make_scenario is not None:
+            return Trial(seed=s, scenario=make_scenario(seed=s, **av),
+                         label=label)
+        return Trial(seed=s, participation=make_participation(seed=s, **av),
+                     label=label)
+
     specs: list[FleetSpec] = []
     for name, algo in algos.items():
         common = dict(uses_update_clock=name in clock,
                       cohort_capacity=cohort_capacity)
         if callable(algo) and not hasattr(algo, "init_state"):
             for av in avail_grid:
-                trials = [
-                    Trial(seed=s,
-                          participation=make_participation(seed=s, **av),
-                          label=f"{name}/{_avail_tag(av)}/seed{s}")
-                    for s in seeds]
+                trials = [_trial(s, av, name) for s in seeds]
                 specs.append(FleetSpec(algo=algo(**av), trials=trials,
                                        name=f"{name}/{_avail_tag(av)}",
                                        **common))
         else:
-            trials = [
-                Trial(seed=s, participation=make_participation(seed=s, **av),
-                      label=f"{name}/{_avail_tag(av)}/seed{s}")
-                for av in avail_grid for s in seeds]
+            trials = [_trial(s, av, name)
+                      for av in avail_grid for s in seeds]
             specs.append(FleetSpec(algo=algo, trials=trials, name=name,
                                    **common))
     return specs

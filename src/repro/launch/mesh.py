@@ -1,4 +1,4 @@
-"""Production mesh builders (DESIGN.md §5).
+"""Production mesh builders (docs/architecture.md §5).
 
 Functions, not module-level constants: importing this module never touches JAX
 device state. The dry-run sets XLA_FLAGS for 512 host devices *before* any JAX

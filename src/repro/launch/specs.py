@@ -2,7 +2,7 @@
 
 `plan(arch, shape, mesh)` returns a DryrunPlan (step fn, abstract args,
 in/out shardings, donated args) ready for `.lower().compile()`, or a Skip
-with the documented reason (DESIGN.md §4): encoder-only archs have no decode;
+with the documented reason (docs/architecture.md §4): encoder-only archs have no decode;
 long_500k only runs for sub-quadratic-capable archs.
 """
 from __future__ import annotations
@@ -103,7 +103,7 @@ def plan(arch: str, shape_name: str, mesh, *,
         cfg = cfg.replace(pad_q_heads=up(cfg.n_heads),
                           pad_kv_heads=up(cfg.n_kv_heads))
 
-    # ---- documented skips (DESIGN.md §4) ----
+    # ---- documented skips (docs/architecture.md §4) ----
     if shape.kind == "decode" and not cfg.supports_decode:
         return Skip(arch, shape_name,
                     "encoder-only architecture: no autoregressive decode")

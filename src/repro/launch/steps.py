@@ -6,7 +6,7 @@ train_step(params, G, batch, active, eta) -> (params, G, metrics)
   * sequential mode (fsdp archs): lax.scan over clients, each client's K-step
     update computed with the batch sharded over the data axis (per-client
     gradients live once, sharded 2-D) — the memory-feasible path for 110B
-    (DESIGN.md §3).
+    (docs/architecture.md §3).
 
 serve_step:
   * decode: (params, cache, tokens, pos) -> (logits, cache) — ONE new token

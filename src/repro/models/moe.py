@@ -1,6 +1,6 @@
 """Mixture-of-Experts block: top-k router + sort-based capacity dispatch.
 
-TPU adaptation (DESIGN.md §3): instead of a dense one-hot dispatch tensor
+TPU adaptation (docs/architecture.md §3): instead of a dense one-hot dispatch tensor
 (T x E x C — infeasible at 1M tokens) we sort token assignments by expert id
 and gather into an (E, C, d) buffer, run the per-expert SwiGLU as a single
 batched einsum over the expert axis (expert-parallel: E is sharded over the

@@ -1,0 +1,16 @@
+"""Scenario subsystem: correlated, non-stationary, jit-native availability.
+
+A `Scenario` composes an availability process with a latency model; every
+process exposes a host (NumPy, for `run_fl`/`sim.engine`) and a jit-native
+(pure ``(key, t, state) -> (mask, state)``, for `run_fl` and the fleet
+executor) sampling surface drawing identical masks at a fixed seed. See
+docs/scenarios.md for the taxonomy and theory mapping.
+"""
+from repro.scenarios.base import (AvailabilityProcess, HostSampler,  # noqa: F401
+                                  Scenario, TauBound, as_process)
+from repro.scenarios.processes import (Adversarial, Bernoulli,  # noqa: F401
+                                       BernoulliDrift, ClusterCorrelated,
+                                       Diurnal, GilbertElliott,
+                                       StagedBlackout)
+from repro.scenarios.registry import (make_process, make_scenario,  # noqa: F401
+                                      register, scenario_names)

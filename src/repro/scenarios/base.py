@@ -1,0 +1,206 @@
+"""Scenario base layer: availability processes with host AND jit surfaces.
+
+The paper's theory makes *no* distributional assumption on A(t); the
+processes in `core.participation` cover only i.i.d. Bernoulli, deterministic
+blackouts, and trace replay — all NumPy-on-host, which forces the vmapped
+fleet executor to precompute (T, N) trace matrices before it can sweep
+availability. This module defines the contract that removes both limits:
+
+* `AvailabilityProcess` — one availability law with TWO sampling surfaces
+  that draw *identical* masks at a fixed seed:
+
+    - jit-native: `sample_fn()` returns a pure function
+      ``(key, t, state) -> (mask, state)`` safe under `jax.jit`/`jax.vmap`,
+      so `run_fl` and the fleet executor sample availability *inside* the
+      jitted round (no host trace materialisation). `state` is a pytree of
+      arrays (empty dict for memoryless processes) so per-trial parameters
+      and chain state batch along the fleet's trial axis.
+    - host: `host_sampler()` returns a stateful object satisfying the
+      legacy participation protocol (``.sample(t) -> (N,) bool``, ``.n``),
+      consumable by `run_fl`, `sim.engine.FedSimEngine`, and every existing
+      call site. The dynamics are re-implemented in NumPy; only the uniform
+      draws come from the same counter-based `jax.random` stream, which is
+      what makes the two surfaces bit-identical (property-tested in
+      tests/test_scenarios.py).
+
+* `TauBound` — which theory regime the process falls in: whether the
+  paper's Assumption 4 (τ(t,i) <= t0 + t/b) holds deterministically, with
+  the witnessing t0, plus the stationary E[τ] where a closed form exists.
+
+* `Scenario` — a named (process, latency-model) pair: the full environment
+  of one experiment cell. `sim_inputs()` adapts it to `FedSimEngine`.
+
+Conventions shared by every process (matching `core.participation`):
+round 0 is always all-active (paper Remark 5.2 / Definition 5.2(1)), and
+per-round randomness is derived as `jax.random.fold_in(key, t)` so masks
+depend only on (seed, t), never on how many times a surface was queried.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TauBound:
+    """Where a process sits relative to the paper's Assumption 4.
+
+    Attributes:
+      deterministic: True when ``τ(t,i) <= t0 + t/b`` holds for EVERY sample
+        path (with the `t0` below and any b); False for processes with
+        unbounded (e.g. geometric) off-time tails, where the bound holds
+        only in probability.
+      t0: the witnessing offset — the longest possible inactivity stretch —
+        or ``np.inf`` when no almost-sure bound exists.
+      expected_tau: stationary E[τ] averaged over devices (Definition 5.1's
+        τ̄ in the long-run limit); ``np.nan`` when no closed form exists.
+      note: one-line justification, for benchmark tables and error messages.
+    """
+
+    deterministic: bool
+    t0: float
+    expected_tau: float
+    note: str = ""
+
+    def holds(self, t0: float, b: float = np.inf) -> bool:
+        """True iff Assumption 4 with offset `t0` (and any slope b >= 1)
+        holds on every sample path of this process."""
+        del b  # any b suffices once the stretch is bounded by t0
+        return self.deterministic and self.t0 <= t0
+
+
+class HostSampler:
+    """Host (NumPy) surface of an `AvailabilityProcess`.
+
+    Satisfies the legacy participation protocol: ``sample(t) -> (N,) bool``
+    plus the ``n`` attribute, so it plugs into `run_fl(participation=...)`,
+    `FedSimEngine`, and `fleet.Trial(participation=...)` unchanged.
+
+    Stateful processes (Markov chains) must be queried with strictly
+    consecutive rounds t = 0, 1, 2, ... — the chain state at t depends on
+    every earlier transition. Memoryless processes accept any t.
+    """
+
+    def __init__(self, process: "AvailabilityProcess"):
+        self.process = process
+        self.n = process.n
+        self._state = process.init_state_host()
+        self._t_next = 0
+
+    def sample(self, t: int) -> np.ndarray:
+        """Availability mask for round t as a (N,) bool array."""
+        if not self.process.stateless:
+            if t != self._t_next:
+                raise ValueError(
+                    f"{type(self.process).__name__} is stateful: host "
+                    f"sampling must visit rounds in order (expected "
+                    f"t={self._t_next}, got t={t})")
+            self._t_next += 1
+        mask, self._state = self.process.host_step(t, self._state)
+        return np.asarray(mask, bool)
+
+
+class AvailabilityProcess:
+    """Base class: one availability law, two equivalent sampling surfaces.
+
+    Subclasses set `n` (device count), `seed`, `stateless`, and implement:
+
+      * `init_state()`      — jit-side state pytree (jnp leaves) holding
+                              BOTH chain state and numeric parameters:
+                              nothing trial-specific may hide in the sample
+                              function's closure, so the fleet executor can
+                              stack states of same-type processes with
+                              different parameters along the trial axis.
+      * `sample_fn()`       — pure ``(key, t, state) -> (mask, state)``;
+                              `mask` is (n,) bool, `t` a traced int32
+                              scalar. MUST force all-active at t == 0.
+      * `host_step(t, st)`  — the same transition in NumPy, consuming
+                              uniforms from `uniforms(t, ...)`.
+      * `stationary_rate()` — (n,) long-run activity rate per device.
+      * `tau_bound()`       — `TauBound` classifying the theory regime.
+    """
+
+    n: int
+    seed: int
+    stateless: bool = True
+
+    @property
+    def key(self) -> jax.Array:
+        """Base PRNG key; both surfaces derive round keys by fold_in(key, t)."""
+        return jax.random.PRNGKey(self.seed)
+
+    def uniforms(self, t: int, shape: tuple) -> np.ndarray:
+        """Host-side U(0,1) draws for round t — the SAME values the jit
+        surface draws from fold_in(key, t), materialised to NumPy."""
+        return np.asarray(jax.random.uniform(
+            jax.random.fold_in(self.key, t), shape), np.float64)
+
+    # -- jit surface ------------------------------------------------------ #
+    def init_state(self) -> dict:
+        """Initial jit-side state pytree ({} for memoryless processes)."""
+        return {}
+
+    def sample_fn(self) -> Callable:
+        """Pure ``(key, t, state) -> ((n,) bool mask, state)``, jit/vmap-safe."""
+        raise NotImplementedError
+
+    # -- host surface ----------------------------------------------------- #
+    def init_state_host(self) -> dict:
+        """NumPy mirror of `init_state` (parameters + chain state)."""
+        return jax.tree.map(np.asarray, self.init_state())
+
+    def host_step(self, t: int, state: dict) -> tuple[np.ndarray, dict]:
+        """NumPy mirror of one `sample_fn` application at round t."""
+        raise NotImplementedError
+
+    def host_sampler(self) -> HostSampler:
+        """Fresh host-surface sampler (legacy participation protocol)."""
+        return HostSampler(self)
+
+    # -- theory ----------------------------------------------------------- #
+    def stationary_rate(self) -> np.ndarray:
+        """(n,) long-run fraction of rounds each device is active."""
+        raise NotImplementedError
+
+    def tau_bound(self) -> TauBound:
+        """Assumption-4 classification of this process (see `TauBound`)."""
+        raise NotImplementedError
+
+
+@dataclass
+class Scenario:
+    """One experiment environment: availability process + latency model.
+
+    Attributes:
+      process: the `AvailabilityProcess` (who is active each round).
+      latency: optional per-client RTT model from `repro.sim.latency`
+        (``sample(t) -> (N,) seconds``); None for round-synchronous runs.
+      name: registry name + parameter tag, for labels and artifacts.
+    """
+
+    process: AvailabilityProcess
+    latency: Any = None
+    name: str = ""
+
+    @property
+    def n(self) -> int:
+        """Device count of the underlying process."""
+        return self.process.n
+
+    def sim_inputs(self) -> tuple[HostSampler, Any]:
+        """(participation, latency) pair for `FedSimEngine`."""
+        if self.latency is None:
+            raise ValueError(
+                f"scenario {self.name!r} has no latency model; pass one at "
+                "construction to drive the runtime simulator")
+        return self.process.host_sampler(), self.latency
+
+
+def as_process(scenario_or_process) -> AvailabilityProcess:
+    """Accept either a `Scenario` or a bare process; return the process."""
+    if isinstance(scenario_or_process, Scenario):
+        return scenario_or_process.process
+    return scenario_or_process

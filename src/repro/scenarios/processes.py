@@ -1,0 +1,483 @@
+"""Concrete availability processes: correlated, non-stationary, jit-native.
+
+Every process here implements BOTH surfaces of `base.AvailabilityProcess`
+(pure-jnp `sample_fn` for in-jit sampling; NumPy `host_step` for `run_fl`/
+`sim.engine`) from the SAME per-round uniform draws, so the two surfaces
+produce identical masks at a fixed seed. The catalogue covers the regimes
+the related work shows break FedAvg-style baselines while MIFA's memory
+holds up (docs/scenarios.md maps each to the literature):
+
+  * Bernoulli        — i.i.d. per-device rates (Definition 5.2 / paper §5.1);
+                       jit-native port of `core.BernoulliParticipation`.
+  * BernoulliDrift   — independent but non-stationary: rates drift linearly,
+                       clipped to [lo, hi].
+  * GilbertElliott   — per-device two-state Markov chain: correlated
+                       availability with tunable burst length (Rodio et al.).
+  * ClusterCorrelated— a shared regional-outage Markov chain per cluster
+                       gates groups of devices (spatially correlated).
+  * Diurnal          — day/night duty cycle: cyclo-stationary sine rates
+                       with per-device phase (rolling time zones).
+  * StagedBlackout   — piecewise-constant rate schedule that can sharpen
+                       mid-run; with {0,1} rates it is fully deterministic.
+  * Adversarial      — jit-native port of `core.AdversarialParticipation`
+                       (periodic deterministic blackouts; exact same masks).
+
+Layout contract: ALL numeric parameters live in the state pytree returned
+by `init_state()` (chain state and constants alike), NOT in the sample
+function's closure. That is what lets the fleet executor batch trials with
+*different* scenario parameters (an availability grid) under one vmap —
+the pure function is shared per scenario type; everything trial-specific
+rides the stacked state. `host_step` consumes the NumPy mirror of the same
+state (`init_state_host`), so the formulas are written once.
+
+All processes force round 0 all-active (Definition 5.2(1)) and derive round
+randomness as fold_in(key, t) — masks depend on (seed, t) only.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios.base import AvailabilityProcess, TauBound
+
+
+def _per_device(x, n: int, lo: float = 0.0, hi: float = 1.0) -> np.ndarray:
+    out = np.broadcast_to(np.asarray(x, np.float32), (n,)).copy()
+    assert np.all((out >= lo) & (out <= hi)), (x, lo, hi)
+    return out
+
+
+def _geometric_expected_tau(rate: np.ndarray) -> float:
+    """Stationary E[τ] averaged over devices for i.i.d. Bernoulli(rate):
+    P(τ=k) = p(1−p)^k  =>  E[τ] = (1−p)/p."""
+    p = np.asarray(rate, np.float64)
+    return float(np.mean((1.0 - p) / np.maximum(p, 1e-12)))
+
+
+class _ThresholdProcess(AvailabilityProcess):
+    """Memoryless family: active iff u_t(i) < p_i(t).
+
+    Subclasses implement `probs_at(t, state, xp)` with `xp` = numpy or
+    jax.numpy — ONE formula serves both surfaces, reading its parameters
+    from the (jnp or NumPy-mirror) state, in float32 on both sides so the
+    threshold comparison agrees bit-for-bit.
+    """
+
+    stateless = True
+
+    def probs_at(self, t, state, xp):
+        """(n,) activity probabilities at round t (xp = np | jnp, f32)."""
+        raise NotImplementedError
+
+    def sample_fn(self) -> Callable:
+        n = self.n
+        probs_at = self.probs_at
+
+        def sample(key, t, state):
+            u = jax.random.uniform(jax.random.fold_in(key, t), (n,))
+            mask = u < probs_at(t, state, jnp)
+            mask = jnp.where(t == 0, jnp.ones_like(mask), mask)
+            return mask, state
+
+        return sample
+
+    def host_step(self, t: int, state: dict) -> tuple[np.ndarray, dict]:
+        if t == 0:
+            return np.ones(self.n, bool), state
+        u = self.uniforms(t, (self.n,))
+        return u < self.probs_at(t, state, np), state
+
+
+class Bernoulli(_ThresholdProcess):
+    """i.i.d. Bernoulli activity with per-device rates (Definition 5.2).
+
+    The jit-native counterpart of `core.BernoulliParticipation` (the legacy
+    class keeps its NumPy RNG stream; this one draws from fold_in(key, t)).
+    """
+
+    def __init__(self, probs, n: int | None = None, seed: int = 0):
+        self.n = n if n is not None else len(np.atleast_1d(probs))
+        self.seed = seed
+        self.probs = _per_device(probs, self.n)
+
+    def init_state(self) -> dict:
+        return {"probs": jnp.asarray(self.probs)}
+
+    def probs_at(self, t, state, xp):
+        return state["probs"]
+
+    def stationary_rate(self) -> np.ndarray:
+        return self.probs.astype(np.float64)
+
+    def tau_bound(self) -> TauBound:
+        if np.all(self.probs >= 1.0):
+            return TauBound(True, 0.0, 0.0, "always active")
+        return TauBound(False, np.inf,
+                        _geometric_expected_tau(self.probs),
+                        "geometric off-times: bounded only in probability")
+
+
+class BernoulliDrift(_ThresholdProcess):
+    """Independent but non-stationary: p_i(t) = clip(p0_i + drift_i·t, lo, hi).
+
+    Models fleets whose participation erodes (negative drift: battery
+    attrition, churn) or ramps (positive drift: staged rollout) over
+    training. `stationary_rate` reports the limiting rate the clip pins
+    each device to.
+    """
+
+    def __init__(self, p0, drift, lo: float = 0.05, hi: float = 1.0,
+                 n: int | None = None, seed: int = 0):
+        self.n = n if n is not None else len(np.atleast_1d(p0))
+        self.seed = seed
+        self.p0 = _per_device(p0, self.n)
+        self.drift = np.broadcast_to(
+            np.asarray(drift, np.float32), (self.n,)).copy()
+        self.lo = np.float32(lo)
+        self.hi = np.float32(hi)
+
+    def init_state(self) -> dict:
+        return {"p0": jnp.asarray(self.p0), "drift": jnp.asarray(self.drift),
+                "lo": jnp.float32(self.lo), "hi": jnp.float32(self.hi)}
+
+    def probs_at(self, t, state, xp):
+        t32 = xp.asarray(t, xp.float32)
+        return xp.clip(state["p0"] + state["drift"] * t32,
+                       state["lo"], state["hi"])
+
+    def stationary_rate(self) -> np.ndarray:
+        limit = np.where(self.drift > 0, self.hi,
+                         np.where(self.drift < 0, self.lo, self.p0))
+        return limit.astype(np.float64)
+
+    def tau_bound(self) -> TauBound:
+        return TauBound(False, np.inf,
+                        _geometric_expected_tau(self.stationary_rate()),
+                        "limiting-rate geometric tail (non-stationary "
+                        "transient ignored)")
+
+
+class Diurnal(_ThresholdProcess):
+    """Day/night duty cycle: p_i(t) = clip(base_i + amp_i·sin(2πt/period
+    + phase_i), 0, 1) — cyclo-stationary, per-device phases model rolling
+    time zones. The regime of "Federated Learning under Heterogeneous and
+    Correlated Client Availability": availability correlated in time and
+    across the devices sharing a phase.
+
+    `period` is rounded to whole rounds and the probability table for one
+    period is PRECOMPUTED on the host at construction; both surfaces index
+    it by t mod period. Evaluating sin at sample time would let libm and
+    XLA disagree by an ulp and (rarely) flip a threshold comparison —
+    table lookup keeps the two surfaces bit-identical by construction.
+    """
+
+    def __init__(self, base, amplitude, period: float, phase=0.0,
+                 n: int | None = None, seed: int = 0):
+        self.n = n if n is not None else len(np.atleast_1d(base))
+        self.seed = seed
+        self.base = _per_device(base, self.n)
+        self.amplitude = _per_device(amplitude, self.n)
+        self.period = max(int(round(float(period))), 1)
+        self.phase = np.broadcast_to(
+            np.asarray(phase, np.float32), (self.n,)).copy()
+        ts = np.arange(self.period, dtype=np.float32)[:, None]
+        ang = np.float32(2.0 * np.pi / self.period) * ts + self.phase[None]
+        self.table = np.clip(self.base[None]
+                             + self.amplitude[None] * np.sin(ang),
+                             0.0, 1.0).astype(np.float32)   # (P, n)
+
+    def init_state(self) -> dict:
+        return {"table": jnp.asarray(self.table)}
+
+    def probs_at(self, t, state, xp):
+        # table length is static per scenario type+period (like
+        # StagedBlackout's stage count), so int mod is exact on both sides
+        return state["table"][xp.asarray(t, xp.int32)
+                              % state["table"].shape[0]]
+
+    def stationary_rate(self) -> np.ndarray:
+        """Exact time-average of p_i(t) over one period."""
+        return self.table.mean(0).astype(np.float64)
+
+    def tau_bound(self) -> TauBound:
+        return TauBound(False, np.inf, np.nan,
+                        "cyclo-stationary Bernoulli: no a.s. bound, no "
+                        "closed-form E[τ]; estimate empirically")
+
+
+class StagedBlackout(_ThresholdProcess):
+    """Piecewise-constant rate schedule: stage s covers rounds
+    [bounds[s-1], bounds[s]) and applies rates stage_probs[s] (S, n);
+    the final stage persists forever. Rates in {0, 1} give deterministic
+    staged blackouts (the "sharpening mid-run" regime of "Efficient
+    Federated Learning against Heterogeneous and Non-stationary Client
+    Unavailability"); fractional rates give a non-stationary mixture.
+    """
+
+    def __init__(self, stage_probs, bounds, n: int | None = None,
+                 seed: int = 0):
+        probs = np.asarray(stage_probs, np.float32)
+        assert probs.ndim == 2, "stage_probs must be (n_stages, n)"
+        self.n = n if n is not None else probs.shape[1]
+        self.seed = seed
+        self.stage_probs = np.stack(
+            [_per_device(row, self.n) for row in probs])
+        self.bounds = np.asarray(bounds, np.int32)
+        assert len(self.bounds) == len(self.stage_probs) - 1
+        assert np.all(np.diff(self.bounds) > 0) and np.all(self.bounds > 0)
+
+    def init_state(self) -> dict:
+        return {"stage_probs": jnp.asarray(self.stage_probs),
+                "bounds": jnp.asarray(self.bounds)}
+
+    def probs_at(self, t, state, xp):
+        idx = xp.searchsorted(state["bounds"], xp.asarray(t, xp.int32),
+                              side="right")
+        return state["stage_probs"][idx]
+
+    def stationary_rate(self) -> np.ndarray:
+        """The persistent regime: the final stage's rates."""
+        return self.stage_probs[-1].astype(np.float64)
+
+    def tau_bound(self) -> TauBound:
+        binary = np.all((self.stage_probs == 0) | (self.stage_probs == 1))
+        if binary and np.all(self.stage_probs[-1] == 1):
+            # deterministic: longest dark stretch over the finite schedule
+            horizon = int(self.bounds[-1]) + 1
+            state = self.init_state_host()
+            masks = np.stack([self.probs_at(t, state, np) >= 1.0
+                              for t in range(horizon)])
+            masks[0] = True                      # round-0 convention
+            t0 = _longest_dark_run(masks)
+            return TauBound(True, float(t0), np.nan,
+                            "deterministic schedule, final stage all-on")
+        if np.any(self.stage_probs[-1] == 0):
+            return TauBound(False, np.inf, np.inf,
+                            "final stage darkens some device forever: "
+                            "Assumption 4 fails, τ grows linearly")
+        return TauBound(False, np.inf,
+                        _geometric_expected_tau(self.stage_probs[-1]),
+                        "stochastic stages: geometric tail in the final "
+                        "regime")
+
+
+def _longest_dark_run(masks: np.ndarray) -> int:
+    """(T, n) bool -> the longest consecutive all-False run in any column."""
+    dark = ~masks
+    best = run = np.zeros(masks.shape[1], np.int64)
+    for row in dark:
+        run = np.where(row, run + 1, 0)
+        best = np.maximum(best, run)
+    return int(best.max(initial=0))
+
+
+class GilbertElliott(AvailabilityProcess):
+    """Per-device two-state Markov chain (Gilbert–Elliott): an active device
+    fails with prob `p_fail` per round; an inactive one recovers with prob
+    `p_recover`. Off-times are Geometric(p_recover) — expected burst length
+    1/p_recover — so availability is *temporally correlated* with tunable
+    burst length: the regime where i.i.d.-assuming baselines (FedAvg-IS)
+    break and MIFA's memory pays off.
+
+    Stationary activity rate: π_up = p_recover / (p_fail + p_recover).
+    Stationary E[τ] has the closed form  p_fail / (p_recover·(p_fail +
+    p_recover))  (pinned in tests/test_scenarios.py).
+    """
+
+    stateless = False
+
+    def __init__(self, p_fail, p_recover, n: int | None = None,
+                 seed: int = 0):
+        self.n = n if n is not None else len(np.atleast_1d(p_fail))
+        self.seed = seed
+        self.p_fail = _per_device(p_fail, self.n, lo=0.0, hi=1.0)
+        self.p_recover = _per_device(p_recover, self.n, lo=1e-6, hi=1.0)
+
+    @classmethod
+    def from_rate_and_burst(cls, rate, burst, n: int, seed: int = 0):
+        """Parametrise by stationary activity `rate` and expected off-burst
+        length `burst` (rounds): p_recover = 1/burst, p_fail solved from
+        rate = p_recover/(p_fail + p_recover).
+
+        Raises when the pair is infeasible (p_fail would exceed 1, i.e.
+        burst < (1−rate)/rate) — clipping silently would deliver a
+        different activity rate than the caller calibrated for."""
+        rate = _per_device(rate, n, lo=1e-6, hi=1.0)
+        burst = np.broadcast_to(
+            np.asarray(burst, np.float32), (n,)).astype(np.float64)
+        if np.any(burst < 1.0):
+            raise ValueError(f"burst must be >= 1 round, got {burst.min()}")
+        p_rec = 1.0 / burst
+        p_fail = p_rec * (1.0 - rate) / np.maximum(rate, 1e-6)
+        if np.any(p_fail > 1.0):
+            bad = float(p_fail.max())
+            raise ValueError(
+                f"(rate, burst) infeasible: implied p_fail={bad:.3f} > 1 — "
+                "need burst >= (1-rate)/rate so the on-times stay long "
+                "enough to average `rate` activity")
+        return cls(p_fail, p_rec, n=n, seed=seed)
+
+    def init_state(self) -> dict:
+        return {"up": jnp.ones((self.n,), bool),
+                "p_fail": jnp.asarray(self.p_fail),
+                "p_recover": jnp.asarray(self.p_recover)}
+
+    def sample_fn(self) -> Callable:
+        n = self.n
+
+        def sample(key, t, state):
+            u = jax.random.uniform(jax.random.fold_in(key, t), (n,))
+            trans = jnp.where(state["up"], u >= state["p_fail"],
+                              u < state["p_recover"])
+            up = jnp.where(t == 0, jnp.ones_like(trans), trans)
+            return up, {**state, "up": up}
+
+        return sample
+
+    def host_step(self, t: int, state: dict) -> tuple[np.ndarray, dict]:
+        u = self.uniforms(t, (self.n,))
+        trans = np.where(state["up"], u >= state["p_fail"],
+                         u < state["p_recover"])
+        up = np.ones(self.n, bool) if t == 0 else trans.astype(bool)
+        return up, {**state, "up": up}
+
+    def stationary_rate(self) -> np.ndarray:
+        pf = self.p_fail.astype(np.float64)
+        pr = self.p_recover.astype(np.float64)
+        return pr / np.maximum(pf + pr, 1e-12)
+
+    def expected_tau(self) -> float:
+        """Closed-form stationary E[τ] averaged over devices:
+        P(τ=k) = π_up·p_f·(1−p_r)^(k−1) for k>=1  =>
+        E[τ] = π_up·p_f/p_r² = p_f / (p_r·(p_f + p_r))."""
+        pf = self.p_fail.astype(np.float64)
+        pr = self.p_recover.astype(np.float64)
+        return float(np.mean(pf / np.maximum(pr * (pf + pr), 1e-12)))
+
+    def tau_bound(self) -> TauBound:
+        if np.all(self.p_fail == 0):
+            return TauBound(True, 0.0, 0.0, "never fails")
+        return TauBound(False, np.inf, self.expected_tau(),
+                        "Geometric(p_recover) off-bursts: unbounded support")
+
+
+class ClusterCorrelated(AvailabilityProcess):
+    """Cluster-correlated availability: devices are partitioned into
+    clusters (regions / carriers / time zones) and a SHARED two-state
+    outage chain gates each cluster — cluster c fails with `q_fail[c]` per
+    round and recovers with `q_recover[c]`. A device is active iff its
+    cluster is up AND its own i.i.d. Bernoulli(p_device) draw succeeds.
+
+    Availability is correlated ACROSS devices (a regional outage silences a
+    whole cluster at once), the case Rodio et al. show biases
+    active-cohort averaging hardest; MIFA replays the silenced cluster's
+    remembered updates.
+    """
+
+    stateless = False
+
+    def __init__(self, n: int, n_clusters: int, q_fail, q_recover,
+                 p_device=1.0, assignment=None, seed: int = 0):
+        self.n = n
+        self.seed = seed
+        self.n_clusters = int(n_clusters)
+        self.q_fail = _per_device(q_fail, self.n_clusters)
+        self.q_recover = _per_device(q_recover, self.n_clusters, lo=1e-6)
+        self.p_device = _per_device(p_device, n)
+        self.assignment = (np.arange(n) % self.n_clusters
+                           if assignment is None
+                           else np.asarray(assignment, np.int32))
+        assert self.assignment.shape == (n,)
+        assert self.assignment.max(initial=0) < self.n_clusters
+
+    def init_state(self) -> dict:
+        return {"cl_up": jnp.ones((self.n_clusters,), bool),
+                "q_fail": jnp.asarray(self.q_fail),
+                "q_recover": jnp.asarray(self.q_recover),
+                "p_device": jnp.asarray(self.p_device),
+                "assignment": jnp.asarray(self.assignment)}
+
+    def sample_fn(self) -> Callable:
+        n, m = self.n, self.n_clusters
+
+        def sample(key, t, state):
+            u = jax.random.uniform(jax.random.fold_in(key, t), (m + n,))
+            u_cl, u_dev = u[:m], u[m:]
+            trans = jnp.where(state["cl_up"], u_cl >= state["q_fail"],
+                              u_cl < state["q_recover"])
+            cl_up = jnp.where(t == 0, jnp.ones_like(trans), trans)
+            mask = cl_up[state["assignment"]] & (u_dev < state["p_device"])
+            mask = jnp.where(t == 0, jnp.ones_like(mask), mask)
+            return mask, {**state, "cl_up": cl_up}
+
+        return sample
+
+    def host_step(self, t: int, state: dict) -> tuple[np.ndarray, dict]:
+        m = self.n_clusters
+        u = self.uniforms(t, (m + self.n,))
+        u_cl, u_dev = u[:m], u[m:]
+        trans = np.where(state["cl_up"], u_cl >= state["q_fail"],
+                         u_cl < state["q_recover"])
+        cl_up = (np.ones(m, bool) if t == 0 else trans.astype(bool))
+        new = {**state, "cl_up": cl_up}
+        if t == 0:
+            return np.ones(self.n, bool), new
+        mask = cl_up[state["assignment"]] & (u_dev < state["p_device"])
+        return mask, new
+
+    def stationary_rate(self) -> np.ndarray:
+        qf = self.q_fail.astype(np.float64)
+        qr = self.q_recover.astype(np.float64)
+        pi_up = qr / np.maximum(qf + qr, 1e-12)
+        return pi_up[self.assignment] * self.p_device.astype(np.float64)
+
+    def tau_bound(self) -> TauBound:
+        return TauBound(False, np.inf, np.nan,
+                        "cluster outage × device Bernoulli: alternating "
+                        "renewal, no closed-form E[τ]")
+
+
+class Adversarial(_ThresholdProcess):
+    """jit-native port of `core.AdversarialParticipation`: device i is dark
+    for the first `offs[i]` slots of every `periods[i]`-round cycle (with
+    per-device `phases`). Deterministic — both surfaces reproduce the
+    legacy class's masks EXACTLY, and Assumption 4 holds with t0 =
+    max(offs) (pinned in tests/test_participation.py).
+    """
+
+    stateless = True
+
+    def __init__(self, periods, offs, phases=None, n: int | None = None,
+                 seed: int = 0):
+        self.n = n if n is not None else len(np.atleast_1d(periods))
+        self.seed = seed
+        self.periods = np.broadcast_to(
+            np.asarray(periods, np.int32), (self.n,)).copy()
+        self.offs = np.broadcast_to(
+            np.asarray(offs, np.int32), (self.n,)).copy()
+        self.phases = (np.zeros(self.n, np.int32) if phases is None
+                       else np.broadcast_to(
+                           np.asarray(phases, np.int32), (self.n,)).copy())
+        assert np.all(self.offs < self.periods)
+
+    def init_state(self) -> dict:
+        return {"periods": jnp.asarray(self.periods),
+                "offs": jnp.asarray(self.offs),
+                "phases": jnp.asarray(self.phases)}
+
+    def probs_at(self, t, state, xp):
+        # deterministic: probability is the {0,1} indicator of the pattern
+        ph = (xp.asarray(t, xp.int32) + state["phases"]) % state["periods"]
+        return (ph >= state["offs"]).astype(xp.float32)
+
+    def stationary_rate(self) -> np.ndarray:
+        return 1.0 - self.offs.astype(np.float64) / self.periods
+
+    def tau_bound(self) -> TauBound:
+        offs = self.offs.astype(np.float64)
+        exp_tau = float(np.mean(offs * (offs + 1) / (2.0 * self.periods)))
+        return TauBound(True, float(self.offs.max(initial=0)), exp_tau,
+                        "periodic blackouts: τ <= max(offs) surely")

@@ -39,6 +39,14 @@ class SimConfig:
 
 
 class FedSimEngine:
+    """Discrete-event driver: simulated-seconds rounds over a RoundRunner.
+
+    `policy` decides who is dispatched and when rounds close;
+    `participation` (any ``.sample(t)`` process, incl. scenario host
+    samplers) is replayed on the temporal axis; `latency` draws per-device
+    RTTs. See the module docstring for the per-round event flow.
+    """
+
     def __init__(self, runner: RoundRunner, policy, participation, latency,
                  config: SimConfig = SimConfig(), seed: int = 0):
         assert latency.n == runner.n_clients, (latency.n, runner.n_clients)
@@ -87,6 +95,9 @@ class FedSimEngine:
 
     # ------------------------------------------------------------------ #
     def run_round(self, t: int) -> dict:
+        """Simulate one server round: dispatch, drain arrivals, apply the
+        policy's mask through RoundRunner, advance the clock. Returns the
+        round record (open/close times, dispatch/applied/late counts)."""
         cfg = self.config
         n = self.runner.n_clients
         now = self.now

@@ -29,6 +29,7 @@ class ShiftedExponentialLatency:
         self.rng = np.random.default_rng(seed)
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) round-trip seconds for round t (fresh exponential draws)."""
         return self.shifts + self.rng.exponential(self.scales)
 
 
@@ -46,6 +47,7 @@ class LognormalLatency:
         self.rng = np.random.default_rng(seed)
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) round-trip seconds: lognormal compute + fixed comm cost."""
         return np.exp(self.rng.normal(self.mu, self.sigma)) + self.comm
 
 
@@ -59,6 +61,7 @@ class TraceLatency:
         self.n = self.trace.shape[1]
 
     def sample(self, t: int) -> np.ndarray:
+        """(N,) recorded round-trip seconds for round t (clamped replay)."""
         return self.trace[min(t, len(self.trace) - 1)].copy()
 
 

@@ -45,9 +45,12 @@ class WaitForAll:
     name: str = "wait_for_all"
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
+        """Dispatch round t to all n devices: (N,) all-True cohort mask."""
         return np.ones(n, bool)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        """Close when the LAST cohort arrival lands: (close_time, applied
+        mask). Devices that never return (inf arrival) are dropped."""
         return _close_at_last_finite(arrivals, cohort, now, epoch_s)
 
 
@@ -57,9 +60,12 @@ class WaitForS:
     name: str = "wait_for_s"
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
+        """Sample S of n devices uniformly (paper Eq. 3): (N,) cohort mask."""
         return _sample_cohort(n, self.s, rng)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        """Block until every sampled device responds: (close_time, applied
+        mask) at the last finite arrival — the straggler-bound baseline."""
         return _close_at_last_finite(arrivals, cohort, now, epoch_s)
 
 
@@ -73,11 +79,14 @@ class Deadline:
     name: str = "deadline"
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
+        """Broadcast, or over-select `cohort_size` devices: (N,) mask."""
         if self.cohort_size is None or self.cohort_size >= n:
             return np.ones(n, bool)
         return _sample_cohort(n, self.cohort_size, rng)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        """Close exactly at now + deadline_s; apply whoever arrived by
+        then (late responders are dropped): (close_time, applied mask)."""
         close = now + self.deadline_s
         return close, cohort & (arrivals <= close)
 
@@ -89,8 +98,11 @@ class Impatient:
     name: str = "impatient"
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
+        """Dispatch to every device: (N,) all-True cohort mask."""
         return np.ones(n, bool)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
+        """Close after the devices available AT DISPATCH respond; never
+        wait for currently-unavailable ones: (close_time, applied mask)."""
         return _close_at_last_finite(arrivals, cohort & avail_now, now,
                                      epoch_s)

@@ -1,0 +1,59 @@
+"""Docs integrity: intra-repo markdown links must resolve.
+
+Scans README.md, the root markdown files, and docs/**.md for markdown
+links `[text](target)`; every relative target (optionally with a #anchor)
+must exist on disk, resolved against the file that contains it. External
+(http/https/mailto) links are skipped — CI must not depend on the network.
+The CI `docs` job runs exactly this file.
+"""
+import os
+import re
+
+import pytest
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def _markdown_files():
+    files = [os.path.join(REPO, f) for f in os.listdir(REPO)
+             if f.endswith(".md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _dirs, names in os.walk(docs):
+            files += [os.path.join(root, f) for f in names
+                      if f.endswith(".md")]
+    return sorted(files)
+
+
+def _broken_links(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    broken = []
+    for target in _LINK.findall(text):
+        if target.startswith(_SKIP) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            broken.append(target)
+    return broken
+
+
+@pytest.mark.parametrize(
+    "path", _markdown_files(),
+    ids=[os.path.relpath(p, REPO) for p in _markdown_files()])
+def test_intra_repo_markdown_links_resolve(path):
+    broken = _broken_links(path)
+    assert not broken, (
+        f"{os.path.relpath(path, REPO)} has broken intra-repo links: "
+        f"{broken}")
+
+
+def test_docs_tree_exists():
+    """The durable reference tree README points at must be present."""
+    for f in ("architecture.md", "scenarios.md", "benchmarks.md"):
+        assert os.path.isfile(os.path.join(REPO, "docs", f)), f

@@ -55,6 +55,34 @@ def test_adversarial_satisfies_assumption4():
     assert masks[0].all()
 
 
+def test_scenario_ports_match_legacy_processes():
+    """The jit-native scenario ports reproduce the legacy host classes:
+    Adversarial masks are EXACTLY equal on both surfaces, and Bernoulli
+    marginal rates match (the RNG streams legitimately differ)."""
+    import jax.numpy as jnp
+    from repro.scenarios import Adversarial, Bernoulli
+
+    n = 6
+    periods = np.array([4, 5, 6, 7, 8, 9])
+    offs = np.array([1, 2, 3, 3, 4, 4])
+    phases = np.arange(n)
+    legacy = AdversarialParticipation(n, periods, offs, phases)
+    port = Adversarial(periods, offs, phases=phases, n=n)
+    host = port.host_sampler()
+    sample = port.sample_fn()
+    state = port.init_state()
+    for t in range(100):
+        want = legacy.sample(t)
+        np.testing.assert_array_equal(host.sample(t), want)
+        mask, state = sample(port.key, jnp.int32(t), state)
+        np.testing.assert_array_equal(np.asarray(mask), want)
+
+    probs = np.linspace(0.2, 0.9, 8)
+    b = Bernoulli(probs, seed=0).host_sampler()
+    rates = np.stack([b.sample(t) for t in range(1, 3001)]).mean(0)
+    assert np.allclose(rates, probs, atol=0.05)
+
+
 def test_trace_participation_forces_first_round():
     tr = np.zeros((5, 3), bool)
     p = TraceParticipation(tr)

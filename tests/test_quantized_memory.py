@@ -3,7 +3,7 @@
 The int8 memory (dense MIFA and Int8PagedBank both reuse it) rests on two
 facts: the reconstruction error is bounded by one quantum per element, and
 stochastic rounding makes the stored value an unbiased estimator — the
-property MIFA's analysis needs (DESIGN.md §3).
+property MIFA's analysis needs (docs/architecture.md §3).
 """
 import jax
 import jax.numpy as jnp
