@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from common import emit, save_artifact, timeit_us
 
 from repro.kernels.mifa_aggregate import mifa_aggregate

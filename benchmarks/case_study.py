@@ -55,7 +55,6 @@ def main(fast: bool = False) -> None:
     t0 = time.time()
     _, h_mifa = run_fleet(algo=MIFA(memory="array"), trials=trials_for(),
                           **kw)
-    t1 = time.time()
     _, h_samp = run_fleet(algo=FedAvgSampling(s=n_clients // 3),
                           trials=trials_for(), uses_update_clock=True, **kw)
     t2 = time.time()

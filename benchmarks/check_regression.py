@@ -1,0 +1,118 @@
+"""CI perf/loss regression gate: compare fast-bench artifacts to a baseline.
+
+The fast benchmark suite (``python benchmarks/run.py --fast --only <name>``)
+writes benchmarks/artifacts/<name>.json. This script compares those
+artifacts against the *committed* pins in
+benchmarks/baselines/ci_baseline.json and exits non-zero on any regression,
+so the tier1 CI job fails instead of silently shipping a slower or
+less-convergent engine.
+
+Baseline schema — ``metrics`` maps a human-readable metric name to a spec:
+
+    {"artifact": "scan_scale",          # benchmarks/artifacts/<artifact>.json
+     "path": "results.T64.speedup",     # dotted path; ints index lists
+     "min": 1.3}                        # and ONE OF the comparators:
+
+  * ``min`` / ``max``   — perf bounds (floor on speedups, cap on times).
+    Perf pins are deliberately generous: CI runners vary several-fold in
+    absolute speed, but engine-relative ratios (scan vs loop, fleet vs
+    sequential) survive machine changes — a ratio collapsing toward 1.0
+    means the optimisation itself broke (e.g. the scan path silently
+    falling back to the loop).
+  * ``value`` + ``rtol`` — convergence pins: |got − want| ≤ rtol·|want|.
+    Final losses are deterministic per jax version; the tolerance absorbs
+    cross-version fp drift while still catching trajectory corruption.
+
+A missing artifact or path is itself a FAILURE — a benchmark that silently
+stopped producing the metric must not read as "no regression".
+
+Refreshing the baseline is an explicit, reviewed act: regenerate the fast
+artifacts locally, update the pinned numbers, and commit the diff with the
+reason (see docs/benchmarks.md, "Refreshing the CI baseline").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "baselines", "ci_baseline.json")
+DEFAULT_ARTIFACTS = os.path.join(HERE, "artifacts")
+
+
+def extract(obj, path: str):
+    """Walk a dotted `path` through dicts (keys) and lists (int indices)."""
+    cur = obj
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def check_metric(name: str, spec: dict, artifacts_dir: str) -> str | None:
+    """Returns an error string on regression/missing data, None on pass."""
+    art_path = os.path.join(artifacts_dir, spec["artifact"] + ".json")
+    if not os.path.exists(art_path):
+        return (f"{name}: artifact {spec['artifact']}.json missing from "
+                f"{artifacts_dir} (did the benchmark run?)")
+    with open(art_path) as f:
+        artifact = json.load(f)
+    try:
+        got = float(extract(artifact, spec["path"]))
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        return (f"{name}: path {spec['path']!r} not found in "
+                f"{spec['artifact']}.json ({type(e).__name__}: {e})")
+    if "min" in spec and got < spec["min"]:
+        return (f"{name}: {got:.4g} < min {spec['min']:.4g} "
+                f"({spec['artifact']}.json:{spec['path']})")
+    if "max" in spec and got > spec["max"]:
+        return (f"{name}: {got:.4g} > max {spec['max']:.4g} "
+                f"({spec['artifact']}.json:{spec['path']})")
+    if "value" in spec:
+        want, rtol = float(spec["value"]), float(spec.get("rtol", 1e-3))
+        if abs(got - want) > rtol * abs(want):
+            return (f"{name}: {got:.6g} deviates from pinned {want:.6g} "
+                    f"by more than rtol={rtol} "
+                    f"({spec['artifact']}.json:{spec['path']})")
+    return None
+
+
+def run_checks(baseline: dict, artifacts_dir: str) -> list[str]:
+    """Check every baseline metric; returns the list of failure messages."""
+    failures = []
+    for name, spec in baseline["metrics"].items():
+        err = check_metric(name, spec, artifacts_dir)
+        if err is None:
+            print(f"PASS {name}")
+        else:
+            print(f"FAIL {err}")
+            failures.append(err)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="pinned-metric file (ci_baseline.json)")
+    ap.add_argument("--artifacts", default=DEFAULT_ARTIFACTS,
+                    help="directory of freshly generated artifact JSONs")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = run_checks(baseline, args.artifacts)
+    if failures:
+        print(f"\n{len(failures)} regression(s) against "
+              f"{os.path.relpath(args.baseline)}; if intentional, refresh "
+              "the baseline in an explicit reviewed commit "
+              "(docs/benchmarks.md).", file=sys.stderr)
+        return 1
+    print(f"\nall {len(baseline['metrics'])} baseline metrics hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

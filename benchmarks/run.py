@@ -18,6 +18,8 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
   scenario_grid    : algorithm × availability-scenario convergence grid
                      (repro.scenarios): MIFA-vs-FedAvg gap under
                      correlated / non-stationary availability
+  scan_scale       : whole-run scan engine (core.scan_engine) vs the
+                     per-round dispatch loop — rounds/sec across T
 """
 from __future__ import annotations
 
@@ -33,39 +35,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced sweep for CI")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name (see module list)")
     args = ap.parse_args()
 
-    import adversarial
-    import agg_throughput
-    import bank_scale
-    import case_study
-    import fig2_convergence
-    import fleet_scale
-    import roofline_bench
-    import scenario_grid
-    import tau_stats
-    import time_to_accuracy
+    names = ("tau_stats", "agg_throughput", "adversarial", "case_study",
+             "fig2_convergence", "roofline_bench", "time_to_accuracy",
+             "bank_scale", "fleet_scale", "scenario_grid", "scan_scale")
+    # validate BEFORE any benchmark module imports: a typo'd --only must
+    # not silently run *nothing* (hollow CI smoke steps), and it must not
+    # die on some unrelated module's import error either
+    if args.only is not None and args.only not in names:
+        print(f"unknown benchmark {args.only!r}; valid names: "
+              f"{', '.join(names)}", file=sys.stderr)
+        raise SystemExit(2)
+    selected = names if args.only is None else (args.only,)
 
-    modules = {
-        "tau_stats": tau_stats,
-        "agg_throughput": agg_throughput,
-        "adversarial": adversarial,
-        "case_study": case_study,
-        "fig2_convergence": fig2_convergence,
-        "roofline_bench": roofline_bench,
-        "time_to_accuracy": time_to_accuracy,
-        "bank_scale": bank_scale,
-        "fleet_scale": fleet_scale,
-        "scenario_grid": scenario_grid,
-    }
+    import importlib
     print("name,us_per_call,derived")
     failed = []
-    for name, mod in modules.items():
-        if args.only and name != args.only:
-            continue
+    for name in selected:
         try:
-            mod.main(fast=args.fast)
+            importlib.import_module(name).main(fast=args.fast)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

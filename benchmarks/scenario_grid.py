@@ -147,7 +147,10 @@ def main(fast: bool = False) -> None:
         results["cells"].append(cell)
 
     save_artifact("scenario_grid", results)
-    write_md(results)
+    if not fast:
+        # the committed .md is the full-scale headline table; a --fast
+        # (CI smoke) run must never clobber it with toy-problem numbers
+        write_md(results)
 
 
 def write_md(results: dict) -> None:

@@ -48,18 +48,22 @@ def _scatter_jnp(rows, g_sum, ids, valid, updates):
     return rows_new, g_new
 
 
-@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
-def _scatter(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+def _scatter_pure(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+    """Scatter body with no jit wrapper — scan/vmap/jit-trace safe."""
     if use_pallas:
-        from repro.kernels.ops import bank_update_tree
-        rows_new, dsum = bank_update_tree(rows, updates, ids, valid)
+        from repro.kernels.ops import bank_update_tree_pure
+        rows_new, dsum = bank_update_tree_pure(rows, updates, ids, valid)
         g_sum = jax.tree.map(jnp.add, g_sum, dsum)
         return rows_new, g_sum
     return _scatter_jnp(rows, g_sum, ids, valid, updates)
 
 
-@partial(jax.jit, donate_argnums=(0, 1), static_argnames=("use_pallas",))
-def _scatter_fleet(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
+_scatter = partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("use_pallas",))(_scatter_pure)
+
+
+def _scatter_fleet_pure(rows, g_sum, ids, valid, updates, *,
+                        use_pallas: bool):
     """Batched (K-trial) scatter: rows (K, R, ...), ids/valid (K, C).
 
     use_pallas routes to the grid-axis batched kernel
@@ -67,11 +71,26 @@ def _scatter_fleet(rows, g_sum, ids, valid, updates, *, use_pallas: bool):
     vmapped — bit-identical per trial to the sequential `_scatter`.
     """
     if use_pallas:
-        from repro.kernels.ops import fleet_bank_update_tree
-        rows_new, dsum = fleet_bank_update_tree(rows, updates, ids, valid)
+        from repro.kernels.ops import fleet_bank_update_tree_pure
+        rows_new, dsum = fleet_bank_update_tree_pure(rows, updates, ids,
+                                                     valid)
         g_sum = jax.tree.map(jnp.add, g_sum, dsum)
         return rows_new, g_sum
     return jax.vmap(_scatter_jnp)(rows, g_sum, ids, valid, updates)
+
+
+_scatter_fleet = partial(jax.jit, donate_argnums=(0, 1),
+                         static_argnames=("use_pallas",))(_scatter_fleet_pure)
+
+
+def _traced(tree) -> bool:
+    """True when any leaf is abstract — i.e. we are already inside a jit /
+    scan / vmap trace, where the jitted+donating wrappers must be bypassed
+    (donation inside a trace is meaningless and a nested jit only costs an
+    extra dispatch layer)."""
+    import jax.core
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves(tree))
 
 
 class DenseBank(MemoryBank):
@@ -126,8 +145,9 @@ class DenseBank(MemoryBank):
         ids = jnp.asarray(ids, jnp.int32)
         valid = (jnp.ones(ids.shape, bool) if valid is None
                  else jnp.asarray(valid, bool))
-        rows, g_sum = _scatter(state["rows"], state["g_sum"], ids, valid,
-                               updates, use_pallas=self._pallas())
+        fn = _scatter_pure if _traced((state, ids, updates)) else _scatter
+        rows, g_sum = fn(state["rows"], state["g_sum"], ids, valid,
+                         updates, use_pallas=self._pallas())
         return {"rows": rows, "g_sum": g_sum}
 
     def scatter_fleet(self, state: dict, ids, updates, *, valid=None,
@@ -146,9 +166,10 @@ class DenseBank(MemoryBank):
         ids = jnp.asarray(ids, jnp.int32)
         valid = (jnp.ones(ids.shape, bool) if valid is None
                  else jnp.asarray(valid, bool))
-        rows, g_sum = _scatter_fleet(state["rows"], state["g_sum"], ids,
-                                     valid, updates,
-                                     use_pallas=self._pallas())
+        fn = (_scatter_fleet_pure if _traced((state, ids, updates))
+              else _scatter_fleet)
+        rows, g_sum = fn(state["rows"], state["g_sum"], ids, valid,
+                         updates, use_pallas=self._pallas())
         return {"rows": rows, "g_sum": g_sum}
 
     def mean_g(self, state: dict):

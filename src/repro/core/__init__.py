@@ -6,4 +6,6 @@ from repro.core.participation import (AdversarialParticipation,  # noqa: F401
                                       BernoulliParticipation,
                                       TraceParticipation, TauStats,
                                       label_correlated_probs, tau_matrix)
-from repro.core.runner import run_fl, FLHistory, RoundRunner  # noqa: F401
+from repro.core.runner import (run_fl, FLHistory,  # noqa: F401
+                               RoundRunner, make_scan_round_fn)
+from repro.core.scan_engine import ScanDriver, scan_supported  # noqa: F401

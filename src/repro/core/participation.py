@@ -155,6 +155,31 @@ class TauStats:
             self.times.append(np.nan if sim_time is None else float(sim_time))
             self.history.append(self.tau.copy())
 
+    def absorb_scan(self, tau: np.ndarray, tau_max_per_dev: np.ndarray,
+                    tau_sums: np.ndarray, tau_sq_sums: np.ndarray) -> None:
+        """Merge one scan-engine chunk of device-accumulated τ statistics.
+
+        The scan engine (docs/architecture.md §9) accumulates τ inside the
+        compiled program — `tau` / `tau_max_per_dev` are the (N,) carry
+        state after the chunk, `tau_sums` / `tau_sq_sums` the per-round
+        Σ_i τ(t,i) and Σ_i τ(t,i)² ys — so no per-round (N,) mask ever
+        reaches the host. Device sums are int32 (exact while Σ_i τ² per
+        round < 2^31); the running totals stay float64 host-side exactly
+        like per-round `update` calls.
+        """
+        tau_sums = np.asarray(tau_sums)
+        if self.rounds == 0 and len(tau_sums) and self.strict \
+                and tau_sums[0] != 0:
+            raise ValueError(
+                "absorb_scan: round 0 must be all-active (Definition "
+                "5.2(1)); pass strict=False to use the init convention.")
+        self.tau = np.asarray(tau, np.int64)
+        self.tau_max_per_dev = np.asarray(tau_max_per_dev, np.int64)
+        self.sum_tau += float(np.sum(tau_sums, dtype=np.float64))
+        self.sum_tau_sq += float(np.sum(np.asarray(tau_sq_sums),
+                                        dtype=np.float64))
+        self.rounds += len(tau_sums)
+
     def timeline(self) -> tuple[np.ndarray, np.ndarray]:
         """Time-stamped view: (times (R,), τ history (R, N)), row-aligned.
 

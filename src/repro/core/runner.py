@@ -148,6 +148,88 @@ def make_scenario_round_fn(model, algo, k_steps: int, weight_decay: float,
     return round_fn
 
 
+def make_scan_round_fn(model, algo, k_steps: int, weight_decay: float, *,
+                       scen_fn=None, cohort: bool = False,
+                       track_tau: bool = False):
+    """Lift the pure round functions into a `lax.scan` body.
+
+    The body computes ONE federated round and has the scan signature
+    ``(carry, xs) -> (carry, ys)``; `repro.core.scan_engine` scans it over a
+    chunk of rounds so T rounds compile into one XLA program, and the fleet
+    executor vmaps the SAME body over a leading trial axis before scanning —
+    per round it is exactly `make_dense_round_fn` / `make_scenario_round_fn`
+    / `make_cohort_round_fn`, so scan trajectories are fp32 bit-exact
+    against the per-round dispatch loop (tests/test_scan_engine.py).
+
+    Three modes (exactly one):
+      * dense mask (default)   — xs carries the host-drawn ``active`` (N,)
+        mask per round (legacy participation processes).
+      * scenario (`scen_fn`)   — availability is sampled INSIDE the body
+        from the jit-native scenario surface; the scenario state threads
+        through the carry and xs carries only the round index ``t``. With
+        `track_tau`, τ statistics accumulate in the carry ((N,) int32
+        current/max τ) and per-round int32 sums ride the ys — no (T, N)
+        mask trace is ever materialised.
+      * cohort (`cohort=True`) — xs carries the padded cohort (``ids``,
+        ``valid``, compact batch); jittable banks only.
+
+    Carry layout: ``{"state", "params", "rng"}`` plus ``{"scen_state",
+    "scen_key"}`` in scenario mode and ``{"tau", "tau_max"}`` when
+    `track_tau`. ys are the round's metrics dict (plus ``tau_sum`` /
+    ``tau_sq_sum``, exact while Σ τ² per round < 2^31).
+    """
+    assert not (cohort and scen_fn is not None), \
+        "cohort scan bodies take host-assembled cohorts, not a scen_fn"
+    assert not (track_tau and scen_fn is None), \
+        "track_tau is for scenario bodies (mask-mode τ runs on the host)"
+
+    if cohort:
+        cohort_round = make_cohort_round_fn(model, algo, k_steps,
+                                            weight_decay)
+
+        def body(carry, x):
+            rng, sub = jax.random.split(carry["rng"])
+            state, params, metrics = cohort_round(
+                carry["state"], carry["params"], x["batch"], x["ids"],
+                x["valid"], x["eta_loc"], x["eta_srv"], sub)
+            return ({"state": state, "params": params, "rng": rng}, metrics)
+
+        return body
+
+    if scen_fn is not None:
+        scen_round = make_scenario_round_fn(model, algo, k_steps,
+                                            weight_decay, scen_fn)
+
+        def body(carry, x):
+            rng, sub = jax.random.split(carry["rng"])
+            state, params, metrics, scen_state, mask = scen_round(
+                carry["state"], carry["params"], x["batch"],
+                carry["scen_state"], x["t"], carry["scen_key"],
+                x["eta_loc"], x["eta_srv"], sub)
+            out = {"state": state, "params": params, "rng": rng,
+                   "scen_state": scen_state, "scen_key": carry["scen_key"]}
+            if track_tau:
+                tau = jnp.where(mask, 0, carry["tau"] + 1)
+                out["tau"] = tau
+                out["tau_max"] = jnp.maximum(carry["tau_max"], tau)
+                metrics = dict(metrics, tau_sum=jnp.sum(tau),
+                               tau_sq_sum=jnp.sum(tau * tau))
+            return out, metrics
+
+        return body
+
+    base = make_dense_round_fn(model, algo, k_steps, weight_decay)
+
+    def body(carry, x):
+        rng, sub = jax.random.split(carry["rng"])
+        state, params, metrics = base(
+            carry["state"], carry["params"], x["batch"], x["active"],
+            x["eta_loc"], x["eta_srv"], sub)
+        return ({"state": state, "params": params, "rng": rng}, metrics)
+
+    return body
+
+
 def make_cohort_round_fn(model, algo, k_steps: int, weight_decay: float):
     """One whole cohort round (local updates + bank scatter + server step)
     as a pure function — jittable banks only.
@@ -202,6 +284,7 @@ class RoundRunner:
         self.batcher = batcher
         self.schedule = schedule
         self.eta_local = eta_local
+        self.weight_decay = weight_decay
         self.uses_update_clock = uses_update_clock
         self.cohort_capacity = cohort_capacity
         self.rng = jax.random.PRNGKey(seed)
@@ -381,7 +464,8 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
            weight_decay: float = 0.0, seed: int = 0,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
-           cohort_capacity: int | None = None,
+           cohort_capacity: int | None = None, engine: str = "loop",
+           scan_chunk: int = 64,
            verbose: bool = False) -> tuple[Any, FLHistory]:
     """Run T round-synchronous rounds of federated training.
 
@@ -405,14 +489,42 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
     either way, but fp32 reduction *grouping* depends on the padded
     length — pin the capacity when comparing trajectories bit-for-bit
     across drivers (see tests/test_fleet).
+
+    `engine` selects the execution strategy (docs/architecture.md §9):
+      * "loop" — one jitted dispatch per round (the historical path).
+      * "scan" — `repro.core.scan_engine`: rounds are compiled into
+        `lax.scan` programs of up to `scan_chunk` rounds each, fp32
+        bit-exact against the loop. Configurations the scan cannot express
+        (update-clock schedules, host-offloaded banks) fall back to the
+        loop with a warning.
+      * "scan_strict" — like "scan" but unsupported configurations raise.
     """
     if (participation is None) == (scenario is None):
         raise ValueError("pass exactly one of participation= or scenario=")
+    if engine not in ("loop", "scan", "scan_strict"):
+        raise ValueError(f"unknown engine {engine!r}: expected 'loop', "
+                         "'scan', or 'scan_strict'")
     runner = RoundRunner(model=model, algo=algo, batcher=batcher,
                          schedule=schedule, eta_local=eta_local,
                          weight_decay=weight_decay, seed=seed, params=params,
                          uses_update_clock=uses_update_clock,
                          cohort_capacity=cohort_capacity, scenario=scenario)
+    if engine != "loop":
+        from repro.core.scan_engine import ScanDriver, scan_supported
+        ok, why = scan_supported(runner)
+        if ok:
+            t0 = time.time()
+            ScanDriver(runner, scan_chunk=scan_chunk).run(
+                n_rounds, participation=participation, eval_fn=eval_fn,
+                eval_every=eval_every, verbose=verbose)
+            runner.hist.wall_time = time.time() - t0
+            return runner.finalize()
+        if engine == "scan_strict":
+            raise ValueError(f"engine='scan_strict': {why}")
+        import warnings
+        warnings.warn(f"engine='scan' unsupported for this configuration "
+                      f"({why}); falling back to the per-round loop",
+                      stacklevel=2)
     t0 = time.time()
     for t in range(n_rounds):
         if scenario is not None:

@@ -1,0 +1,294 @@
+"""Whole-run scan engine: compile T federated rounds into one XLA program.
+
+The per-round loop (`run_fl`'s historical path) pays one jitted dispatch,
+one host→device batch upload, and one Python iteration per round. On the
+tiny models where availability studies actually run (the paper's Fig. 2,
+correlated-availability grids), that dispatch overhead dominates compute by
+an order of magnitude. This module fuses the run itself: the pure round
+functions of `core.runner` become a `lax.scan` body
+(`runner.make_scan_round_fn`) and T rounds execute as ⌈T/scan_chunk⌉
+compiled programs.
+
+Chunking (`scan_chunk`): the scan consumes stacked per-round inputs
+(batches, masks, learning rates), so an unchunked T-round program would
+hold T rounds of batches on device at once and could only report history
+at the very end. Chunks bound that memory by the chunk length, flush
+`FLHistory` every chunk boundary, and give eval/logging host points — and
+the chunk carry is donated, so params/state buffers are reused in place
+across chunks. Chunk boundaries additionally snap to eval rounds so
+`eval_fn` runs at exactly the rounds the loop engine would evaluate.
+
+Carry / ys layout (see `make_scan_round_fn`): the carry is
+``{"state", "params", "rng"}`` plus the scenario's ``{"scen_state",
+"scen_key"}`` and the τ accumulators ``{"tau", "tau_max"}``; the stacked
+ys are the per-round metrics `FLHistory` records, plus per-round τ sums so
+`TauStats` can be reconstructed without materialising a (T, N) mask trace.
+
+What falls back to the loop (`scan_supported`): update-clock schedules
+(the host schedule callable would need the device-side applied-update
+counter every round) and host-offloaded banks (`HostBank`,
+`Int8PagedBank` — their rows live outside jit by design). `run_fl`
+warns and loops for these under ``engine="scan"`` and raises under
+``engine="scan_strict"``.
+
+Bit-exactness: per round the scan body IS the loop's jitted round function,
+and `jax.random.split` / `fold_in` are deterministic bitwise, so scan
+trajectories are fp32 bit-exact against the loop for dense algorithms and
+for jittable banks with a pinned `cohort_capacity` (the loop's per-round
+pow-2 cohort buckets vary with |A(t)|; a scan program has one shape, so the
+engine pins unpinned cohort runs to the N-client bucket — pin the capacity
+on both paths when comparing, per `run_fl`'s docstring).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runner import RoundRunner, _pow2_bucket, make_scan_round_fn
+
+
+def scan_supported(runner: RoundRunner) -> tuple[bool, str]:
+    """Can this runner's configuration execute as a scan? (ok, reason)."""
+    if runner.uses_update_clock:
+        return False, ("update-clock schedules read the device-side "
+                       "applied-update counter between rounds; the host "
+                       "cannot precompute a chunk of learning rates")
+    if runner.cohort_mode and not getattr(getattr(runner.algo, "bank", None),
+                                          "jittable", False):
+        return False, ("host-offloaded banks (HostBank / Int8PagedBank) "
+                       "keep their rows outside jit by design and cannot "
+                       "live in a scan carry")
+    return True, ""
+
+
+def _eval_rounds(n_rounds: int, eval_every: int, has_eval: bool) -> set:
+    """The rounds after which the loop engine would run eval_fn."""
+    if not has_eval:
+        return set()
+    pts = {t for t in range(n_rounds) if t % eval_every == 0}
+    pts.add(n_rounds - 1)
+    return pts
+
+
+def chunk_bounds(n_rounds: int, scan_chunk: int,
+                 eval_rounds: set) -> list[tuple[int, int]]:
+    """[t0, t1) segments: cut every `scan_chunk` rounds AND after each eval
+    round, so evals land exactly where the loop engine runs them."""
+    if scan_chunk < 1:
+        raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
+    cuts = {0, n_rounds}
+    cuts.update(range(0, n_rounds, scan_chunk))
+    cuts.update(t + 1 for t in eval_rounds if t < n_rounds)
+    edges = sorted(cuts)
+    return list(zip(edges[:-1], edges[1:]))
+
+
+def _stack(trees: list) -> dict:
+    """Stack a list of per-round pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: np.stack(xs), *trees)
+
+
+def pad_cohort(ids: np.ndarray, cap: int, n_clients: int,
+               round_t: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad one cohort's ids to the scan capacity: (padded, valid).
+
+    Pad slots point at the bank's dummy row `n_clients` with valid=False,
+    exactly like `RoundRunner.step_cohort`. A scan program has ONE static
+    shape, so a cohort overflowing `cap` raises instead of widening per
+    round the way the loop engine's pow-2 buckets do.
+    """
+    if len(ids) > cap:
+        raise ValueError(
+            f"round {round_t}: cohort of {len(ids)} overflows the scan "
+            f"capacity {cap}; raise cohort_capacity (a scan program cannot "
+            "widen per round the way the loop engine's pow-2 buckets do)")
+    padded = np.full(cap, n_clients, np.int64)
+    padded[:len(ids)] = ids
+    valid = np.zeros(cap, bool)
+    valid[:len(ids)] = True
+    return padded, valid
+
+
+def run_pipelined_chunks(carry, segments, *, chunk_fn, build_xs, writeback,
+                         flush, sync_rounds=frozenset(), on_sync=None):
+    """Software-pipelined chunk execution, shared by `ScanDriver` and
+    `fleet.FleetScanDriver`.
+
+    Each chunk dispatches asynchronously and is flushed one iteration
+    late, so the NEXT chunk's host-side xs assembly overlaps the device
+    executing the current one; the pending flush always completes before
+    the pending carry is donated back into `chunk_fn`. Rounds in
+    `sync_rounds` (eval boundaries) force the flush and then call
+    `on_sync(t)` with the chunk's results on the host.
+
+    Callback contract: ``build_xs(t0, t1)`` assembles a chunk's stacked
+    inputs; ``chunk_fn(carry, xs) -> (carry, ys)`` is the jitted scan;
+    ``writeback(carry)`` publishes the (not-yet-materialised) carry to the
+    runner; ``flush(t0, t1, ys, carry)`` blocks on the chunk's results and
+    records history. Returns the final carry.
+    """
+    pending = None
+    for t0, t1 in segments:
+        xs = build_xs(t0, t1)
+        if pending is not None:
+            flush(*pending)
+        carry, ys = chunk_fn(carry, xs)
+        writeback(carry)
+        pending = (t0, t1, ys, carry)
+        if (t1 - 1) in sync_rounds:
+            flush(*pending)
+            pending = None
+            on_sync(t1 - 1)
+    if pending is not None:
+        flush(*pending)
+    return carry
+
+
+class ScanDriver:
+    """Drives a `RoundRunner` through T rounds as chunked scan programs.
+
+    Constructed by `run_fl(engine="scan")` after `scan_supported` says yes.
+    Reuses the runner's init (params, algorithm state, scenario wiring,
+    RNG stream) so the trajectory is the one the loop engine would produce;
+    on `run` completion the runner's state/params/history/τ stats are
+    written back, and `runner.finalize()` works unchanged.
+    """
+
+    def __init__(self, runner: RoundRunner, *, scan_chunk: int = 64):
+        if scan_chunk < 1:
+            raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
+        self.r = runner
+        self.scan_chunk = scan_chunk
+        r = runner
+        self.scenario_mode = (r.scen_process is not None
+                              and not r.cohort_mode)
+        scen_fn = r.scen_process.sample_fn() if self.scenario_mode else None
+        body = make_scan_round_fn(
+            r.model, r.algo, r.batcher.k_steps, r.weight_decay,
+            scen_fn=scen_fn, cohort=r.cohort_mode,
+            track_tau=self.scenario_mode)
+        self._chunk_fn = jax.jit(
+            lambda carry, xs: jax.lax.scan(body, carry, xs),
+            donate_argnums=(0,))
+        if r.cohort_mode:
+            # one static shape for the whole program: unpinned runs pad to
+            # the N-client bucket (the loop's per-round buckets vary)
+            self.cap = r.cohort_capacity or _pow2_bucket(r.n_clients)
+
+    # ------------------------------------------------------------------ #
+    def _init_carry(self) -> dict:
+        r = self.r
+        # copy params: the chunk call donates the whole carry, and the
+        # initial params may be a caller-passed array (run_fl(params=...))
+        # that the loop engine would never invalidate — donation must only
+        # ever consume engine-owned buffers. One O(d) copy per run; every
+        # later chunk donates the previous chunk's own output.
+        params = jax.tree.map(jnp.array, r.params)
+        carry = {"state": r.state, "params": params, "rng": r.rng}
+        if self.scenario_mode:
+            carry["scen_state"] = r.scen_state
+            carry["scen_key"] = r.scen_key
+            carry["tau"] = jnp.asarray(r.stats.tau, jnp.int32)
+            carry["tau_max"] = jnp.asarray(r.stats.tau_max_per_dev,
+                                           jnp.int32)
+        return carry
+
+    def _writeback(self, carry: dict) -> None:
+        r = self.r
+        r.state, r.params, r.rng = (carry["state"], carry["params"],
+                                    carry["rng"])
+        if self.scenario_mode:
+            r.scen_state = carry["scen_state"]
+
+    def _etas(self, t0: int, t1: int) -> tuple[np.ndarray, np.ndarray]:
+        pairs = [self.r.learning_rates(t) for t in range(t0, t1)]
+        return (np.asarray([p[0] for p in pairs], np.float32),
+                np.asarray([p[1] for p in pairs], np.float32))
+
+    def _host_masks(self, t0: int, t1: int, participation) -> np.ndarray:
+        """(L, N) masks from the host surface, τ stats updated per round
+        exactly as the loop engine's `step` would."""
+        sampler = participation if participation is not None \
+            else self.r._scen_sampler
+        if hasattr(sampler, "sample_block"):
+            masks = sampler.sample_block(t0, t1 - t0)
+        else:
+            masks = np.stack([np.asarray(sampler.sample(t), bool)
+                              for t in range(t0, t1)])
+        for row in masks:
+            self.r.stats.update(np.asarray(row, bool))
+        return np.asarray(masks, bool)
+
+    def _build_xs(self, t0: int, t1: int, participation) -> dict:
+        r = self.r
+        eta_loc, eta_srv = self._etas(t0, t1)
+        xs = {"eta_loc": eta_loc, "eta_srv": eta_srv}
+        if self.scenario_mode:
+            xs["t"] = np.arange(t0, t1, dtype=np.int32)
+            xs["batch"] = _stack([r.batcher.sample_round(t)
+                                  for t in range(t0, t1)])
+            return xs
+        masks = self._host_masks(t0, t1, participation)
+        if not r.cohort_mode:
+            xs["active"] = masks
+            xs["batch"] = _stack([r.batcher.sample_round(t)
+                                  for t in range(t0, t1)])
+            return xs
+        # cohort: reduce each mask to a padded id list + compact batch,
+        # exactly as RoundRunner.step_cohort assembles a single round
+        ids_l, valid_l, batch_l = [], [], []
+        for j, row in enumerate(masks):
+            padded, valid = pad_cohort(np.flatnonzero(row), self.cap,
+                                       r.n_clients, t0 + j)
+            ids_l.append(padded)
+            valid_l.append(valid)
+            batch_l.append(r.batcher.sample_round(
+                t0 + j, client_ids=np.where(valid, padded, 0)))
+        xs["ids"] = np.stack(ids_l)
+        xs["valid"] = np.stack(valid_l)
+        xs["batch"] = _stack(batch_l)
+        return xs
+
+    def _flush(self, t0: int, t1: int, ys: dict, carry: dict) -> None:
+        """Reconstruct per-round history (and τ stats) from the stacked ys.
+
+        Blocks on the chunk's results — `run` calls it one chunk late so
+        the next chunk's host-side xs assembly overlaps device compute.
+        """
+        if self.scenario_mode:
+            self.r.stats.absorb_scan(carry["tau"], carry["tau_max"],
+                                     ys["tau_sum"], ys["tau_sq_sum"])
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+        tau_keys = ("tau_sum", "tau_sq_sum")
+        for j, t in enumerate(range(t0, t1)):
+            self.r.hist.record_round(
+                t, {k: v[j] for k, v in ys.items() if k not in tau_keys})
+
+    # ------------------------------------------------------------------ #
+    def run(self, n_rounds: int, *, participation=None,
+            eval_fn: Callable | None = None, eval_every: int = 10,
+            verbose: bool = False) -> None:
+        """Execute `n_rounds` rounds, mutating the runner in place."""
+        r = self.r
+        if (participation is None and r.scen_process is None):
+            raise ValueError("ScanDriver.run needs participation= or a "
+                             "runner constructed with scenario=")
+        evals = _eval_rounds(n_rounds, eval_every, eval_fn is not None)
+
+        def on_sync(t):
+            el, ea = r.evaluate(t, eval_fn)
+            if verbose:
+                print(f"  round {t:5d} train={r.hist.train_loss[-1]:.4f} "
+                      f"eval={el:.4f} acc={ea:.4f} "
+                      f"active={int(r.hist.n_active[-1])}")
+
+        run_pipelined_chunks(
+            self._init_carry(),
+            chunk_bounds(n_rounds, self.scan_chunk, evals),
+            chunk_fn=self._chunk_fn,
+            build_xs=lambda t0, t1: self._build_xs(t0, t1, participation),
+            writeback=self._writeback, flush=self._flush,
+            sync_rounds=evals, on_sync=on_sync)

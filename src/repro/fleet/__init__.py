@@ -1,4 +1,5 @@
 """Vmapped fleet executor: K independent FL trials as one jitted program."""
 from repro.fleet.executor import (FleetHistory, FleetRunner,  # noqa: F401
+                                  FleetScanDriver, fleet_scan_supported,
                                   make_fleet_eval, run_fleet)
 from repro.fleet.spec import FleetSpec, Trial, expand_grid  # noqa: F401

@@ -131,6 +131,7 @@ class FleetRunner:
         self.batcher = batcher
         self.schedule = schedule
         self.eta_local = eta_local
+        self.weight_decay = weight_decay
         self.uses_update_clock = uses_update_clock
         self.cohort_capacity = cohort_capacity
         self.n_trials = len(seeds)
@@ -194,6 +195,7 @@ class FleetRunner:
         scenarios' host surfaces, which draw identical masks.
         """
         self.scen_round_fn = None
+        self._scen_fn = None
         self._scen_samplers = None
         if scenarios is None:
             return
@@ -211,9 +213,10 @@ class FleetRunner:
         if self.cohort_mode:
             self._scen_samplers = [p.host_sampler() for p in procs]
             return
+        self._scen_fn = procs[0].sample_fn()
         scen_round = make_scenario_round_fn(
             self.model, self.algo, self.batcher.k_steps, weight_decay,
-            procs[0].sample_fn())
+            self._scen_fn)
         self.scen_round_fn = jax.jit(
             jax.vmap(scen_round,
                      in_axes=(0, 0, None, 0, None, 0, 0, 0, 0)),
@@ -363,6 +366,170 @@ class FleetRunner:
         return self.params, self.hist
 
 
+def fleet_scan_supported(runner: FleetRunner) -> tuple[bool, str]:
+    """Can this fleet group execute on the scan-native path? (ok, reason)."""
+    if runner.uses_update_clock:
+        return False, ("update-clock schedules read per-trial device-side "
+                       "counters between rounds; the host cannot precompute "
+                       "a chunk of learning rates")
+    return True, ""
+
+
+class FleetScanDriver:
+    """Scan-native fleet execution: K trials × T rounds as one program.
+
+    The per-trial scan body (`core.runner.make_scan_round_fn`) is vmapped
+    over the trial axis and the result scanned over a chunk of rounds, so
+    one `jit(scan(vmap(round)))` launch advances the whole sweep by
+    `scan_chunk` rounds — per trial bit-exact against both the per-round
+    fleet path and sequential `run_fl` (the body IS the same pure round
+    function; tests/test_scan_engine.py). Chunk boundaries snap to eval
+    rounds exactly like the sequential scan driver
+    (`core.scan_engine.ScanDriver`); τ statistics are not tracked, matching
+    the per-round fleet path.
+    """
+
+    def __init__(self, runner: FleetRunner, *, scan_chunk: int = 64):
+        from repro.core.runner import make_scan_round_fn
+        if scan_chunk < 1:
+            raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
+        self.r = r = runner
+        self.scan_chunk = scan_chunk
+        self.scenario_mode = r._scen_fn is not None
+        body = make_scan_round_fn(
+            r.model, r.algo, r.batcher.k_steps, r.weight_decay,
+            scen_fn=r._scen_fn, cohort=r.cohort_mode)
+        if r.cohort_mode:
+            self.cap = r.cohort_capacity or _pow2_bucket(r.n_clients)
+            # each distinct client's batch crosses host->device ONCE per
+            # round (ubatch, shared across trials); trials gather their
+            # (cap, ...) slices inside the program — the same dedup the
+            # per-round fleet path performs in `cohort_round`
+            base = body
+
+            def body(carry, x):
+                batch = jax.tree.map(lambda l: l[x["idx"]], x["ubatch"])
+                return base(carry, {"batch": batch, "ids": x["ids"],
+                                    "valid": x["valid"],
+                                    "eta_loc": x["eta_loc"],
+                                    "eta_srv": x["eta_srv"]})
+
+            xs_axes = {"ubatch": None, "idx": 0, "ids": 0, "valid": 0,
+                       "eta_loc": 0, "eta_srv": 0}
+        elif self.scenario_mode:
+            xs_axes = {"batch": None, "t": None, "eta_loc": 0, "eta_srv": 0}
+        else:
+            xs_axes = {"batch": None, "active": 0, "eta_loc": 0,
+                       "eta_srv": 0}
+        vbody = jax.vmap(body, in_axes=(0, xs_axes))
+        self._chunk_fn = jax.jit(
+            lambda carry, xs: jax.lax.scan(vbody, carry, xs),
+            donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    def _init_carry(self) -> dict:
+        r = self.r
+        carry = {"state": r.state, "params": r.params, "rng": r.rngs}
+        if self.scenario_mode:
+            carry["scen_state"] = r.scen_state
+            carry["scen_key"] = r.scen_keys
+        return carry
+
+    def _writeback(self, carry: dict) -> None:
+        r = self.r
+        r.state, r.params, r.rngs = (carry["state"], carry["params"],
+                                     carry["rng"])
+        if self.scenario_mode:
+            r.scen_state = carry["scen_state"]
+
+    def _etas(self, t0: int, t1: int) -> tuple[np.ndarray, np.ndarray]:
+        pairs = [self.r.learning_rates(t) for t in range(t0, t1)]
+        return (np.stack([p[0] for p in pairs]),
+                np.stack([p[1] for p in pairs]))     # (L, K) f32
+
+    def _build_xs(self, t0: int, t1: int, parts) -> dict:
+        r = self.r
+        eta_loc, eta_srv = self._etas(t0, t1)
+        xs = {"eta_loc": eta_loc, "eta_srv": eta_srv}
+        if self.scenario_mode:
+            xs["t"] = np.arange(t0, t1, dtype=np.int32)
+            xs["batch"] = jax.tree.map(
+                lambda *ls: np.stack(ls),
+                *[r.batcher.sample_round(t) for t in range(t0, t1)])
+            return xs
+        samplers = parts if parts is not None else r._scen_samplers
+        masks = np.stack([
+            np.stack([np.asarray(p.sample(t), bool) for p in samplers])
+            for t in range(t0, t1)])                 # (L, K, N)
+        if not r.cohort_mode:
+            xs["active"] = masks
+            xs["batch"] = jax.tree.map(
+                lambda *ls: np.stack(ls),
+                *[r.batcher.sample_round(t) for t in range(t0, t1)])
+            return xs
+        from repro.core.scan_engine import pad_cohort
+        K, cap = r.n_trials, self.cap
+        ids_l, valid_l, uniq_l, idx_l = [], [], [], []
+        for j in range(t1 - t0):
+            padded = np.empty((K, cap), np.int64)
+            valid = np.empty((K, cap), bool)
+            for k in range(K):
+                padded[k], valid[k] = pad_cohort(
+                    np.flatnonzero(masks[j, k]), cap, r.n_clients, t0 + j)
+            # pad slots sample client 0's batch, exactly like the per-round
+            # paths. Each distinct client is sampled once per round; every
+            # trial's (cap, ...) slice is gathered on device inside the
+            # scan body (same (seed, t, i) streams as per-trial sampling).
+            wanted = np.where(valid, padded, 0)
+            uniq, inv = np.unique(wanted, return_inverse=True)
+            ids_l.append(padded)
+            valid_l.append(valid)
+            uniq_l.append(uniq)
+            idx_l.append(inv.reshape(K, cap).astype(np.int32))
+        # one shared pow-2 width per chunk so the stacked ubatch leaves are
+        # rectangular and jit traces are reused across chunks
+        u_pad = _pow2_bucket(max(len(u) for u in uniq_l))
+        batch_l = []
+        for j, uniq in enumerate(uniq_l):
+            uniq = np.concatenate(
+                [uniq, np.full(u_pad - len(uniq), uniq[0])])
+            batch_l.append(r.batcher.sample_round(t0 + j, client_ids=uniq))
+        xs["ids"] = np.stack(ids_l)
+        xs["valid"] = np.stack(valid_l)
+        xs["idx"] = np.stack(idx_l)
+        xs["ubatch"] = jax.tree.map(lambda *ls: np.stack(ls), *batch_l)
+        return xs
+
+    # ------------------------------------------------------------------ #
+    def run(self, n_rounds: int, *, parts=None,
+            eval_fn: Callable | None = None, eval_every: int = 10,
+            verbose: bool = False) -> None:
+        """Execute `n_rounds` rounds for all trials, mutating the runner."""
+        from repro.core.scan_engine import (_eval_rounds, chunk_bounds,
+                                            run_pipelined_chunks)
+        r = self.r
+        evals = _eval_rounds(n_rounds, eval_every, eval_fn is not None)
+
+        def flush(t0, t1, ys, _carry):
+            ys = {k: np.asarray(v) for k, v in ys.items()}
+            for j, t in enumerate(range(t0, t1)):
+                r.hist.record_round(t, {k: v[j] for k, v in ys.items()})
+
+        def on_sync(t):
+            el, ea = r.evaluate(t, eval_fn)
+            if verbose:
+                print(f"  round {t:5d} loss={np.asarray(el).mean():.4f} "
+                      f"acc={np.asarray(ea).mean():.4f}")
+
+        run_pipelined_chunks(
+            self._init_carry(),
+            chunk_bounds(n_rounds, self.scan_chunk, evals),
+            chunk_fn=self._chunk_fn,
+            build_xs=lambda t0, t1: self._build_xs(t0, t1, parts),
+            writeback=self._writeback, flush=flush,
+            sync_rounds=evals, on_sync=on_sync)
+
+
 def make_fleet_eval(model, eval_batch: dict) -> Callable:
     """Vmapped eval: stacked params (K, ...) -> (losses (K,), accs (K,))."""
     batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
@@ -384,6 +551,7 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
               weight_decay: float = 0.0, eval_fn: Callable | None = None,
               eval_every: int = 10, uses_update_clock: bool = False,
               cohort_capacity: int | None = None, mesh=None, cfg=None,
+              engine: str = "loop", scan_chunk: int | None = None,
               verbose: bool = False) -> tuple[Any, FleetHistory]:
     """Run T rounds of K independent trials as one vmapped program.
 
@@ -409,6 +577,14 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
         (K,) accs) — see `make_fleet_eval`. Runs every `eval_every` rounds.
       mesh, cfg: optional mesh to shard the trial axis over
         (`sharding.rules.fleet_trial_specs`).
+      engine: "loop" (default) dispatches one vmapped program per round;
+        "scan" compiles `scan_chunk`-round blocks of the whole sweep into
+        single `lax.scan` programs (`FleetScanDriver`,
+        docs/architecture.md §9) — bit-exact per trial, falling back to
+        the loop (with a warning) for update-clock schedules;
+        "scan_strict" raises instead of falling back.
+      scan_chunk: rounds per compiled scan block (None: the spec's
+        `scan_chunk`, else 64).
 
     Returns:
       (stacked params with leading (K,) axis, `FleetHistory`).
@@ -418,7 +594,12 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
         trials = spec.trials
         uses_update_clock = spec.uses_update_clock
         cohort_capacity = spec.cohort_capacity or cohort_capacity
+        if scan_chunk is None:
+            scan_chunk = spec.scan_chunk
     assert algo is not None and trials, "need a FleetSpec or algo + trials"
+    if engine not in ("loop", "scan", "scan_strict"):
+        raise ValueError(f"unknown engine {engine!r}: expected 'loop', "
+                         "'scan', or 'scan_strict'")
     n_scen = sum(tr.scenario is not None for tr in trials)
     if n_scen not in (0, len(trials)):
         raise ValueError("mixing scenario and participation trials in one "
@@ -432,6 +613,22 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
         mesh=mesh, cfg=cfg,
         scenarios=[tr.scenario for tr in trials] if n_scen else None)
     parts = [tr.participation for tr in trials]
+    if engine != "loop":
+        ok, why = fleet_scan_supported(runner)
+        if ok:
+            t0 = time.time()
+            FleetScanDriver(
+                runner,
+                scan_chunk=64 if scan_chunk is None else scan_chunk).run(
+                n_rounds, parts=None if n_scen else parts, eval_fn=eval_fn,
+                eval_every=eval_every, verbose=verbose)
+            runner.hist.wall_time = time.time() - t0
+            return runner.finalize()
+        if engine == "scan_strict":
+            raise ValueError(f"engine='scan_strict': {why}")
+        import warnings
+        warnings.warn(f"engine='scan' unsupported for this fleet ({why}); "
+                      "falling back to the per-round loop", stacklevel=2)
     t0 = time.time()
     for t in range(n_rounds):
         if n_scen:

@@ -60,12 +60,19 @@ class Trial:
 
 @dataclass
 class FleetSpec:
-    """A group of trials sharing one vmapped executable."""
+    """A group of trials sharing one vmapped executable.
+
+    `scan_chunk` tunes the scan-native path (`run_fleet(engine="scan")`):
+    the K×T sweep compiles into `lax.scan` programs of up to `scan_chunk`
+    rounds each (docs/architecture.md §9). None defers to the driver's
+    default; the loop engine ignores it.
+    """
 
     algo: Any
     trials: list[Trial] = field(default_factory=list)
     uses_update_clock: bool = False
     cohort_capacity: int | None = None
+    scan_chunk: int | None = None
     name: str = ""
 
     @property

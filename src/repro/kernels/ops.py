@@ -3,7 +3,9 @@
 * `mifa_aggregate_tree` — applies the fused aggregation kernel across a whole
   parameter pytree (flatten each leaf's model dims, pad to the block size).
 * `bank_update_tree` — the fused cohort gather/delta/scatter over a memory-
-  bank pytree (DenseBank's Pallas path).
+  bank pytree (DenseBank's Pallas path). The `*_pure` variants are the same
+  bodies without the jit wrapper, for callers that are already tracing
+  (jitted round functions, `lax.scan` bodies, vmapped fleet programs).
 * `attention` / `ssd` — drop-in replacements for the jnp paths in
   repro.models (callers opt in; `use_pallas(True/False/None)` only forces
   compiled vs interpret for code that already routes through these wrappers).
@@ -76,8 +78,8 @@ def mifa_aggregate_tree(g_tree, u_tree, active, params, eta, *,
 _BANK_SINGLE_BLOCK = 8192
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def _bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m, interpret):
+def _bank_update_tree_body(rows_tree, upd_tree, ids, valid, *, block_m,
+                           interpret):
     def one(rows, u):
         r, c = rows.shape[0], u.shape[0]
         m_raw = int(np.prod(rows.shape[1:]))
@@ -106,6 +108,10 @@ def _bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m, interpret):
     return rows_new, dsum
 
 
+_bank_update_tree = functools.partial(
+    jax.jit, static_argnames=("block_m", "interpret"))(_bank_update_tree_body)
+
+
 def bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m: int = 512,
                      interpret: bool | None = None):
     """Fused cohort bank update over a pytree.
@@ -119,9 +125,22 @@ def bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m: int = 512,
                              interpret=resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def _fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m,
-                            interpret):
+def bank_update_tree_pure(rows_tree, upd_tree, ids, valid, *,
+                          block_m: int = 512,
+                          interpret: bool | None = None):
+    """`bank_update_tree` without the jit wrapper — for callers that are
+    already inside a trace (a jitted round function, a `lax.scan` body, a
+    vmapped fleet program), where a nested jit with donated buffers is at
+    best a no-op and at worst a trace-time surprise. Same math, same
+    kernel; interpret is still resolved eagerly so the Pallas call sees a
+    concrete bool."""
+    return _bank_update_tree_body(rows_tree, upd_tree, ids, valid,
+                                  block_m=block_m,
+                                  interpret=resolve_interpret(interpret))
+
+
+def _fleet_bank_update_tree_body(rows_tree, upd_tree, ids, valid, *, block_m,
+                                 interpret):
     def one(rows, u):
         K, r = rows.shape[0], rows.shape[1]
         c = u.shape[1]
@@ -147,6 +166,11 @@ def _fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *, block_m,
     return rows_new, dsum
 
 
+_fleet_bank_update_tree = functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "interpret"))(_fleet_bank_update_tree_body)
+
+
 def fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *,
                            block_m: int = 512,
                            interpret: bool | None = None):
@@ -159,6 +183,16 @@ def fleet_bank_update_tree(rows_tree, upd_tree, ids, valid, *,
     return _fleet_bank_update_tree(rows_tree, upd_tree, ids, valid,
                                    block_m=block_m,
                                    interpret=resolve_interpret(interpret))
+
+
+def fleet_bank_update_tree_pure(rows_tree, upd_tree, ids, valid, *,
+                                block_m: int = 512,
+                                interpret: bool | None = None):
+    """Un-jitted `fleet_bank_update_tree` (see `bank_update_tree_pure`):
+    the entry the scan-native fleet path traces inside its own program."""
+    return _fleet_bank_update_tree_body(rows_tree, upd_tree, ids, valid,
+                                        block_m=block_m,
+                                        interpret=resolve_interpret(interpret))
 
 
 def attention(q, k, v, *, causal=True, block_q=128, block_k=128,

@@ -25,7 +25,7 @@ import jax
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import DryrunPlan, Skip, plan
+from repro.launch.specs import Skip, plan
 from repro.models import build_model
 from repro.roofline.analysis import (HW, analyze_compiled, model_flops,
                                      roofline_terms)

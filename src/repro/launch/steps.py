@@ -30,8 +30,6 @@ def make_train_step(model: Model, cfg: ArchConfig, n_clients: int,
                     k_steps: int, update_spec=None) -> Callable:
     """MIFA round as a pure function (array-memory layout, inlined)."""
 
-    mem_dtype = jnp.dtype(cfg.memory_dtype)
-
     if not cfg.sequential_clients:
         def train_step(params, G, batch, active, eta):
             updates, losses = client_updates(model.loss_fn, params, batch,

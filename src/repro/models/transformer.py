@@ -289,7 +289,6 @@ def _layer_prefill(lp: dict, x, positions, aux, cache_entry, spec: SegmentSpec,
             new_cache = {"k": _ring_fill(cache_entry["k"], k),
                          "v": _ring_fill(cache_entry["v"], v)}
         else:
-            S = k.shape[1]
             new_cache = {
                 "k": jax.lax.dynamic_update_slice_in_dim(
                     cache_entry["k"], k.astype(cache_entry["k"].dtype), 0, axis=1),

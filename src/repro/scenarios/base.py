@@ -10,11 +10,14 @@ availability. This module defines the contract that removes both limits:
   that draw *identical* masks at a fixed seed:
 
     - jit-native: `sample_fn()` returns a pure function
-      ``(key, t, state) -> (mask, state)`` safe under `jax.jit`/`jax.vmap`,
-      so `run_fl` and the fleet executor sample availability *inside* the
-      jitted round (no host trace materialisation). `state` is a pytree of
-      arrays (empty dict for memoryless processes) so per-trial parameters
-      and chain state batch along the fleet's trial axis.
+      ``(key, t, state) -> (mask, state)`` safe under `jax.jit`/`jax.vmap`
+      *and* `jax.lax.scan`, so `run_fl` and the fleet executor sample
+      availability *inside* the jitted round (no host trace
+      materialisation). `state` is a pytree of arrays (empty dict for
+      memoryless processes) so per-trial parameters and chain state batch
+      along the fleet's trial axis — and so the whole-run scan engine can
+      thread it through the scan carry, advancing the chain across a chunk
+      of rounds without leaving the compiled program.
     - host: `host_sampler()` returns a stateful object satisfying the
       legacy participation protocol (``.sample(t) -> (N,) bool``, ``.n``),
       consumable by `run_fl`, `sim.engine.FedSimEngine`, and every existing
@@ -101,6 +104,17 @@ class HostSampler:
             self._t_next += 1
         mask, self._state = self.process.host_step(t, self._state)
         return np.asarray(mask, bool)
+
+    def sample_block(self, t0: int, length: int) -> np.ndarray:
+        """(length, n) bool masks for rounds [t0, t0 + length).
+
+        The scan engine's chunk draw (docs/architecture.md §9): cohort
+        algorithms need masks on the host to assemble compact batches, and
+        drawing one chunk at a time keeps host-side mask storage bounded by
+        the chunk length rather than T. Identical draws to `sample` called
+        round by round (it IS `sample` called round by round).
+        """
+        return np.stack([self.sample(t0 + j) for j in range(length)])
 
 
 class AvailabilityProcess:

@@ -1,0 +1,134 @@
+"""The CI perf/loss regression gate fails when metrics regress.
+
+This is the in-repo demonstration the gate's acceptance asks for: a
+synthetic perf (speedup below the pinned floor) or loss (final loss off the
+pin) regression against benchmarks/baselines/ci_baseline.json makes
+`benchmarks/check_regression.py` exit non-zero — including when driven
+through the REAL committed baseline — and a benchmark that silently stops
+producing its artifact or metric is itself a failure, never a pass.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+import check_regression as cr  # noqa: E402
+
+REAL_BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                             "baselines", "ci_baseline.json")
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / f"{name}.json"
+    path.write_text(json.dumps(payload))
+    return str(tmp_path)
+
+
+BASE = {"metrics": {
+    "speedup floor": {"artifact": "bench", "path": "results.speedup",
+                      "min": 2.0},
+    "loss pin": {"artifact": "bench", "path": "results.final_loss",
+                 "value": 1.5, "rtol": 0.02},
+    "time cap": {"artifact": "bench", "path": "results.seconds",
+                 "max": 10.0},
+}}
+
+
+def _artifact(speedup=3.0, loss=1.5, seconds=5.0):
+    return {"results": {"speedup": speedup, "final_loss": loss,
+                        "seconds": seconds}}
+
+
+def test_gate_passes_on_healthy_metrics(tmp_path):
+    d = _write(tmp_path, "bench", _artifact())
+    assert cr.run_checks(BASE, d) == []
+
+
+@pytest.mark.parametrize("kw,expected", [
+    ({"speedup": 1.1}, "min"),               # perf regression
+    ({"loss": 1.7}, "deviates"),             # convergence regression
+    ({"loss": 1.2}, "deviates"),             # suspiciously-good counts too
+    ({"seconds": 99.0}, "max"),              # perf cap
+])
+def test_gate_fails_on_synthetic_regressions(tmp_path, kw, expected):
+    d = _write(tmp_path, "bench", _artifact(**kw))
+    failures = cr.run_checks(BASE, d)
+    assert len(failures) == 1 and expected in failures[0]
+
+
+def test_missing_artifact_and_path_are_failures(tmp_path):
+    failures = cr.run_checks(BASE, str(tmp_path))       # nothing generated
+    assert len(failures) == 3
+    assert all("missing" in f for f in failures)
+    d = _write(tmp_path, "bench", {"results": {}})      # metric vanished
+    failures = cr.run_checks(BASE, d)
+    assert len(failures) == 3 and all("not found" in f for f in failures)
+
+
+def test_main_exit_codes(tmp_path):
+    base_path = tmp_path / "baseline.json"
+    base_path.write_text(json.dumps(BASE))
+    d = _write(tmp_path, "bench", _artifact())
+    assert cr.main(["--baseline", str(base_path), "--artifacts", d]) == 0
+    _write(tmp_path, "bench", _artifact(speedup=0.5))
+    assert cr.main(["--baseline", str(base_path), "--artifacts", d]) == 1
+
+
+def test_run_py_rejects_unknown_only():
+    """A typo'd ``--only`` must exit non-zero listing the valid names — a
+    silent no-op would quietly hollow out the CI smoke steps."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(root, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "benchmarks", "run.py"),
+         "--only", "not_a_benchmark"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode != 0
+    assert "valid names" in proc.stderr
+    assert "scan_scale" in proc.stderr and "fleet_scale" in proc.stderr
+
+
+def test_real_baseline_catches_scan_engine_regression(tmp_path):
+    """Drive the gate through the committed ci_baseline.json: artifacts
+    fabricated exactly at the pins pass; degrading the scan speedup to
+    1.0x (the scan engine silently collapsing into the loop) fails."""
+    with open(REAL_BASELINE) as f:
+        baseline = json.load(f)
+    artifacts = {}
+    for spec in baseline["metrics"].values():
+        art = artifacts.setdefault(spec["artifact"], {})
+        healthy = spec["value"] if "value" in spec else \
+            spec.get("min", 0.0) + 1.0
+        parts = spec["path"].split(".")
+        cur = art
+        for a, b in zip(parts[:-1], parts[1:]):
+            nxt = [] if b.isdigit() else {}
+            if a.isdigit():
+                while len(cur) <= int(a):
+                    cur.append(nxt if len(cur) == int(a) else None)
+                cur = cur[int(a)] if cur[int(a)] is not None else nxt
+            else:
+                cur = cur.setdefault(a, nxt)
+        last = parts[-1]
+        if last.isdigit():
+            while len(cur) <= int(last):
+                cur.append(None)
+            cur[int(last)] = healthy
+        else:
+            cur[last] = healthy
+    for name, payload in artifacts.items():
+        (tmp_path / f"{name}.json").write_text(json.dumps(payload))
+    assert cr.run_checks(baseline, str(tmp_path)) == []
+
+    scan = json.loads((tmp_path / "scan_scale.json").read_text())
+    scan["results"]["T64"]["speedup"] = 1.0
+    (tmp_path / "scan_scale.json").write_text(json.dumps(scan))
+    failures = cr.run_checks(baseline, str(tmp_path))
+    assert len(failures) == 1 and "speedup" in failures[0]

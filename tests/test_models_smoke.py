@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced config, one forward + one train step
 on CPU, asserting output shapes and absence of NaNs (assignment requirement)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -3,7 +3,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim import (constant, cosine, inv_t, nonconvex_fixed,
+from repro.optim import (cosine, inv_t, nonconvex_fixed,
                          paper_strongly_convex, sgd_init, sgd_step)
 
 
