@@ -11,6 +11,15 @@ Backends on this CPU container:
   * dense — O(C·d) when the jitted scatter updates rows in place (donated
     buffers / XLA's in-place scatter); swept to 10⁵ to bound device-memory
     use and benchmark runtime on CI hosts.
+  * paged_device — jittable like dense, but device bytes are bounded by
+    (n_slots+1)·page_size·d regardless of N: rows page in/out through a
+    jit-native page table, so it also rides engine="scan" at N=10⁶
+    (the `paged_scan` section below times exactly that).
+
+Every row records a peak-device-bytes column: `device.memory_stats()`'s
+`peak_bytes_in_use` where the backend reports it (GPU/TPU), else the bytes
+live on device after the timed rounds (`jax.live_arrays()` — CPU fallback,
+a floor on the true peak).
 
 Usage:
     PYTHONPATH=src python benchmarks/run.py --only bank_scale [--fast]
@@ -27,11 +36,24 @@ from common import emit, save_artifact
 
 from repro.bank import BankedMIFA, make_bank
 from repro.core import MIFA
-from repro.core.runner import RoundRunner
+from repro.core.runner import RoundRunner, run_fl
 from repro.data import ProceduralBatcher
 from repro.models.layers import softmax_cross_entropy
 
 DIM, CLASSES = 16, 2
+PAGED_KW = {"page_size": 64, "n_slots": 128}
+
+
+def _peak_device_bytes() -> int:
+    """Peak device allocation if the platform reports it, else live bytes."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return int(stats["peak_bytes_in_use"])
+    except Exception:
+        pass
+    return int(sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.live_arrays()))
 
 
 class TinyLogistic:
@@ -51,17 +73,19 @@ def _draw_cohort(rng, n: int, c: int) -> np.ndarray:
     return np.unique(rng.integers(0, n, size=2 * c))[:c]
 
 
-def _runner(backend: str, n: int, cohort: int, seed: int = 0) -> RoundRunner:
+def _runner(backend: str, n: int, cohort: int, seed: int = 0,
+            **bank_kwargs) -> RoundRunner:
     batcher = ProceduralBatcher(n_clients=n, dim=DIM, n_classes=CLASSES,
                                 batch_size=8, k_steps=2, seed=seed)
-    return RoundRunner(model=TinyLogistic(), algo=BankedMIFA(make_bank(backend)),
+    return RoundRunner(model=TinyLogistic(),
+                       algo=BankedMIFA(make_bank(backend, **bank_kwargs)),
                        batcher=batcher, schedule=lambda t: 0.1, seed=seed,
                        cohort_capacity=cohort)
 
 
 def time_bank_rounds(backend: str, n: int, cohort: int, *, rounds: int,
-                     warmup: int = 3, seed: int = 0) -> dict:
-    runner = _runner(backend, n, cohort, seed=seed)
+                     warmup: int = 3, seed: int = 0, **bank_kwargs) -> dict:
+    runner = _runner(backend, n, cohort, seed=seed, **bank_kwargs)
     rng = np.random.default_rng(seed)
     for t in range(warmup):
         runner.step_cohort(t, _draw_cohort(rng, n, cohort))
@@ -74,6 +98,8 @@ def time_bank_rounds(backend: str, n: int, cohort: int, *, rounds: int,
     mem = runner.algo.bank.memory_bytes(runner.state["bank"])
     return {"backend": backend, "n": n, "cohort": cohort, "us_per_round": us,
             "device_bytes": mem["device"], "host_bytes": mem["host"],
+            "device_pages_bytes": mem.get("device_pages"),
+            "peak_device_bytes": _peak_device_bytes(),
             "final_loss": runner.hist.train_loss[-1]}
 
 
@@ -97,7 +123,58 @@ def time_dense_mifa_rounds(n: int, *, rounds: int, warmup: int = 2,
     g_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(runner.state["G"]))
     return {"backend": "dense_mifa_O(N)", "n": n, "cohort": int(mask.sum()),
             "us_per_round": us, "device_bytes": g_bytes, "host_bytes": 0,
+            "device_pages_bytes": None,
+            "peak_device_bytes": _peak_device_bytes(),
             "final_loss": runner.hist.train_loss[-1]}
+
+
+class _SparseTrace:
+    """Fixed random C-cohort trace. Deliberately NOT TraceParticipation,
+    whose forced all-active round 0 would fault every page at once."""
+
+    def __init__(self, n: int, cohort: int, rounds: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.trace = np.zeros((rounds, n), bool)
+        for t in range(rounds):
+            self.trace[t, _draw_cohort(rng, n, cohort)] = True
+        self.n = n
+
+    def sample(self, t):
+        return self.trace[t]
+
+
+def time_paged_scan(n: int, *, rounds: int, cohort: int, scan_chunk: int,
+                    seed: int = 0) -> dict:
+    """run_fl over the paged bank: engine="scan" vs the dispatch loop.
+
+    Each engine runs twice; the second run hits the in-process jit cache,
+    so its wall time is steady-state (compile reported separately).
+    """
+    def _run(engine):
+        batcher = ProceduralBatcher(n_clients=n, dim=DIM, n_classes=CLASSES,
+                                    batch_size=8, k_steps=2, seed=seed)
+        algo = BankedMIFA(make_bank("paged_device", **PAGED_KW))
+        t0 = time.perf_counter()
+        params, hist = run_fl(
+            model=TinyLogistic(), algo=algo, batcher=batcher,
+            participation=_SparseTrace(n, cohort, rounds, seed=seed),
+            schedule=lambda t: 0.1, n_rounds=rounds, seed=seed,
+            cohort_capacity=cohort, engine=engine, scan_chunk=scan_chunk)
+        jax.block_until_ready(params)
+        return time.perf_counter() - t0, hist
+
+    loop_first, _ = _run("loop")
+    loop_s, h_loop = _run("loop")
+    scan_first, _ = _run("scan")
+    scan_s, h_scan = _run("scan")
+    assert h_loop.train_loss == h_scan.train_loss   # same trajectory
+    return {"n": n, "rounds": rounds, "cohort": cohort,
+            "scan_chunk": scan_chunk,
+            "loop_first_s": loop_first, "scan_first_s": scan_first,
+            "loop_s": loop_s, "scan_s": scan_s,
+            "speedup": loop_s / scan_s,
+            "peak_device_bytes": _peak_device_bytes(),
+            "final_train_loss": h_scan.train_loss[-1]}
 
 
 def main(fast: bool = False) -> None:
@@ -105,9 +182,10 @@ def main(fast: bool = False) -> None:
     rounds = 3 if fast else 10
     ns = [100, 2_000] if fast else [100, 10_000, 100_000, 1_000_000]
     sweeps = {
-        "host": ns,
-        "int8_paged": ns,
-        "dense": [n for n in ns if n <= 100_000],
+        "host": (ns, {}),
+        "int8_paged": (ns, {}),
+        "dense": ([n for n in ns if n <= 100_000], {}),
+        "paged_device": (ns, dict(PAGED_KW)),
     }
     baseline_ns = [100, 1_000] if fast else [100, 10_000]
 
@@ -117,20 +195,32 @@ def main(fast: bool = False) -> None:
         rows.append(row)
         emit(f"bank_scale/dense_mifa_n{n}", row["us_per_round"],
              f"device_mb={row['device_bytes'] / 1e6:.1f}")
-    for backend, sweep in sweeps.items():
+    for backend, (sweep, bkw) in sweeps.items():
         per_n = []
         for n in sweep:
-            row = time_bank_rounds(backend, n, cohort, rounds=rounds)
+            # paged faults compile one scatter per pow-2 batch bucket; give
+            # the paging phase time to settle before the timed rounds
+            wu = 8 if backend == "paged_device" else 3
+            row = time_bank_rounds(backend, n, cohort, rounds=rounds,
+                                   warmup=wu, **bkw)
             rows.append(row)
             per_n.append(row)
             emit(f"bank_scale/{backend}_n{n}", row["us_per_round"],
                  f"host_mb={row['host_bytes'] / 1e6:.1f},"
-                 f"device_mb={row['device_bytes'] / 1e6:.1f}")
+                 f"device_mb={row['device_bytes'] / 1e6:.1f},"
+                 f"peak_device_mb={row['peak_device_bytes'] / 1e6:.1f}")
         # flat-in-N check: largest-N round vs smallest-N round
         ratio = per_n[-1]["us_per_round"] / per_n[0]["us_per_round"]
         n_ratio = per_n[-1]["n"] / per_n[0]["n"]
         emit(f"bank_scale/{backend}_flatness", 0.0,
              f"time_ratio={ratio:.2f}_over_{n_ratio:.0f}x_N")
+        if backend == "paged_device":
+            # the bounded-bytes claim: the page pool is (n_slots+1)·ps·d
+            # regardless of N — identical across the whole sweep
+            pool = {r["device_pages_bytes"] for r in per_n}
+            assert len(pool) == 1, pool
+            emit("bank_scale/paged_device_pool", 0.0,
+                 f"device_pool_mb={pool.pop() / 1e6:.2f}_flat_in_N")
 
     # the dimension that SHOULD grow: cohort size at fixed N
     n_fixed = 2_000 if fast else 100_000
@@ -141,7 +231,30 @@ def main(fast: bool = False) -> None:
         emit(f"bank_scale/host_n{n_fixed}_c{c}", row["us_per_round"],
              f"cohort={c}")
 
+    # the tentpole end-to-end: run_fl(engine="scan") over the paged bank —
+    # fast mode times a CI-pinned point, full mode goes to N=10⁶
+    scan_n = 2_000 if fast else 1_000_000
+    scan_rounds = 64 if fast else 32
+    # chunk * cohort must stay within the slot budget: under scan the
+    # residency unit is the chunk's cohort union
+    scan_chunk = PAGED_KW["n_slots"] // cohort
+    paged_scan = time_paged_scan(scan_n, rounds=scan_rounds, cohort=cohort,
+                                 scan_chunk=scan_chunk)
+    emit(f"bank_scale/paged_scan_n{scan_n}", paged_scan["scan_s"] * 1e6,
+         f"speedup={paged_scan['speedup']:.2f}x,"
+         f"loss={paged_scan['final_train_loss']:.4f},"
+         f"peak_device_mb={paged_scan['peak_device_bytes'] / 1e6:.1f}")
+
+    # paged rounds are flat in N, so comparing the largest swept points is
+    # fair even though the O(N·d) baseline stops at a smaller N
+    mifa_last = [r for r in rows if r["backend"] == "dense_mifa_O(N)"][-1]
+    paged_last = [r for r in rows if r["backend"] == "paged_device"][-1]
+    vs_mifa = mifa_last["us_per_round"] / paged_last["us_per_round"]
+    emit("bank_scale/paged_vs_dense_mifa", 0.0, f"speedup={vs_mifa:.1f}x")
+
     save_artifact("bank_scale", {"rows": rows, "cohort_rows": cohort_rows,
+                                 "paged_scan": paged_scan,
+                                 "paged_vs_dense_mifa_speedup": vs_mifa,
                                  "cohort": cohort, "rounds": rounds})
 
     # sanity, not a timing assert: scaling 10-10000x in N must not blow up

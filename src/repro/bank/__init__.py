@@ -4,12 +4,15 @@ from repro.bank.dense import DenseBank  # noqa: F401
 from repro.bank.host import HostBank  # noqa: F401
 from repro.bank.int8_paged import Int8PagedBank  # noqa: F401
 from repro.bank.mifa_bank import BankedMIFA  # noqa: F401
+from repro.bank.paged_device import PagedDeviceBank  # noqa: F401
 
-_BACKENDS = {"dense": DenseBank, "host": HostBank, "int8_paged": Int8PagedBank}
+_BACKENDS = {"dense": DenseBank, "host": HostBank,
+             "int8_paged": Int8PagedBank, "paged_device": PagedDeviceBank}
 
 
 def make_bank(backend: str = "dense", **kwargs) -> MemoryBank:
-    """backend: 'dense' | 'host' | 'int8_paged' (kwargs -> backend ctor)."""
+    """backend: 'dense' | 'host' | 'int8_paged' | 'paged_device'
+    (kwargs -> backend ctor)."""
     try:
         return _BACKENDS[backend](**kwargs)
     except KeyError:

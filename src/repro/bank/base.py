@@ -80,6 +80,16 @@ class MemoryBank:
         """Backend scatter body; `scatter` has already validated the ids."""
         raise NotImplementedError
 
+    def prepare(self, state: dict, ids) -> dict:
+        """Eager pre-round residency hook: make the rows `ids` (real client
+        ids, already de-padded) cheap to access before a jitted program
+        runs. The default is the identity — only backends that page rows
+        on/off the device (PagedDeviceBank) override it. Drivers call it
+        per round (dispatch loop, fleet) or per chunk union (scan engine's
+        pipelined pre-chunk hook) with concrete numpy ids — never under a
+        trace."""
+        return state
+
     def mean_g(self, state: dict) -> Any:
         """G_sum / N as a device (jnp) pytree with param-shaped leaves."""
         raise NotImplementedError
@@ -95,9 +105,12 @@ class MemoryBank:
     def _require_fleet(self) -> None:
         if not self.jittable:
             raise NotImplementedError(
-                f"{type(self).__name__} is host-offloaded and excluded from "
-                "the vmapped fleet path (docs/architecture.md §7); use DenseBank or run "
-                "trials sequentially")
+                f"{type(self).__name__} is host-offloaded (jittable=False): "
+                "its rows live outside jit, so it cannot run under the "
+                "vmapped fleet path (docs/architecture.md §7). Jittable "
+                "backends — DenseBank ('dense') and PagedDeviceBank "
+                "('paged_device') — support the fleet; otherwise run trials "
+                "sequentially")
 
     def gather_fleet(self, state: dict, ids) -> Any:
         """Batched gather over stacked trial `state`: leaves (K, N+1, ...),
@@ -116,8 +129,9 @@ class MemoryBank:
         give each trial its OWN stream, never one shared key): DenseBank."""
         self._require_fleet()
         raise NotImplementedError(
-            f"{type(self).__name__} does not implement the batched fleet "
-            "scatter")
+            f"{type(self).__name__} is jittable but does not implement the "
+            "batched fleet scatter (rng threading is backend-specific); "
+            "backends that do: DenseBank, PagedDeviceBank")
 
 
 def broadcast_valid(valid: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:

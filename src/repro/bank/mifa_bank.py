@@ -32,6 +32,12 @@ class BankedMIFA:
         return {"bank": self.bank.init(params, n_clients),
                 "t": jnp.zeros((), jnp.int32)}
 
+    def prepare_cohort(self, state: dict, ids) -> dict:
+        """Eager residency hook: page in the rows `ids` (concrete, real
+        client ids) before the jitted round / chunk runs. Identity for
+        non-paging backends (MemoryBank.prepare default)."""
+        return {**state, "bank": self.bank.prepare(state["bank"], ids)}
+
     def round_step_cohort(self, state: dict, ids, valid, updates, losses,
                           rng=None):
         """ids (C,) padded row indices; valid (C,) mask; updates/losses for

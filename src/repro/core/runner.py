@@ -429,6 +429,11 @@ class RoundRunner:
             t, client_ids=np.where(valid, padded, 0))
         eta_loc, eta_srv = self.learning_rates(t)
         self.rng, sub = jax.random.split(self.rng)
+        # paged banks fault this round's rows in before the jitted program
+        # runs (identity for every other backend)
+        prep = getattr(self.algo, "prepare_cohort", None)
+        if prep is not None:
+            self.state = prep(self.state, padded[valid])
         if self.cohort_round_fn is not None:
             self.state, self.params, metrics = self.cohort_round_fn(
                 self.state, self.params, batch, jnp.asarray(padded),

@@ -29,7 +29,12 @@ What falls back to the loop (`scan_supported`): update-clock schedules
 counter every round) and host-offloaded banks (`HostBank`,
 `Int8PagedBank` — their rows live outside jit by design). `run_fl`
 warns and loops for these under ``engine="scan"`` and raises under
-``engine="scan_strict"``.
+``engine="scan_strict"``. `PagedDeviceBank` is NOT excluded: its page
+table is a jnp array in the scan carry, and its host↔device page
+streaming runs at chunk boundaries through the ``pre_chunk`` hook of
+`run_pipelined_chunks` — each chunk's cohort union is paged in while
+the host still owns the carry, so N=10⁶ runs scan with bounded device
+bytes.
 
 Bit-exactness: per round the scan body IS the loop's jitted round function,
 and `jax.random.split` / `fold_in` are deterministic bitwise, so scan
@@ -56,11 +61,14 @@ def scan_supported(runner: RoundRunner) -> tuple[bool, str]:
         return False, ("update-clock schedules read the device-side "
                        "applied-update counter between rounds; the host "
                        "cannot precompute a chunk of learning rates")
-    if runner.cohort_mode and not getattr(getattr(runner.algo, "bank", None),
-                                          "jittable", False):
-        return False, ("host-offloaded banks (HostBank / Int8PagedBank) "
-                       "keep their rows outside jit by design and cannot "
-                       "live in a scan carry")
+    bank = getattr(runner.algo, "bank", None)
+    if runner.cohort_mode and not getattr(bank, "jittable", False):
+        return False, (
+            f"{type(bank).__name__} is host-offloaded: its rows live "
+            "outside jit by design and cannot ride a scan carry; scan-"
+            "capable banks are DenseBank ('dense') and PagedDeviceBank "
+            "('paged_device', bounded device bytes via a jit-native page "
+            "table)")
     return True, ""
 
 
@@ -113,7 +121,8 @@ def pad_cohort(ids: np.ndarray, cap: int, n_clients: int,
 
 
 def run_pipelined_chunks(carry, segments, *, chunk_fn, build_xs, writeback,
-                         flush, sync_rounds=frozenset(), on_sync=None):
+                         flush, sync_rounds=frozenset(), on_sync=None,
+                         pre_chunk=None):
     """Software-pipelined chunk execution, shared by `ScanDriver` and
     `fleet.FleetScanDriver`.
 
@@ -128,13 +137,20 @@ def run_pipelined_chunks(carry, segments, *, chunk_fn, build_xs, writeback,
     inputs; ``chunk_fn(carry, xs) -> (carry, ys)`` is the jitted scan;
     ``writeback(carry)`` publishes the (not-yet-materialised) carry to the
     runner; ``flush(t0, t1, ys, carry)`` blocks on the chunk's results and
-    records history. Returns the final carry.
+    records history. ``pre_chunk(carry) -> carry``, when given, runs after
+    ``build_xs`` (which knows the upcoming chunk's working set) and right
+    before the chunk dispatches — the streaming hook paged banks use to
+    fault the chunk union's pages in while the host still owns the carry;
+    its device reads block on the previous chunk only when pages actually
+    move. Returns the final carry.
     """
     pending = None
     for t0, t1 in segments:
         xs = build_xs(t0, t1)
         if pending is not None:
             flush(*pending)
+        if pre_chunk is not None:
+            carry = pre_chunk(carry)
         carry, ys = chunk_fn(carry, xs)
         writeback(carry)
         pending = (t0, t1, ys, carry)
@@ -177,6 +193,9 @@ class ScanDriver:
             # one static shape for the whole program: unpinned runs pad to
             # the N-client bucket (the loop's per-round buckets vary)
             self.cap = r.cohort_capacity or _pow2_bucket(r.n_clients)
+        # the union of the upcoming chunk's cohorts, stashed by _build_xs
+        # for the paged-bank pre_chunk residency hook
+        self._last_union = None
 
     # ------------------------------------------------------------------ #
     def _init_carry(self) -> dict:
@@ -250,7 +269,16 @@ class ScanDriver:
         xs["ids"] = np.stack(ids_l)
         xs["valid"] = np.stack(valid_l)
         xs["batch"] = _stack(batch_l)
+        self._last_union = np.concatenate(
+            [p[v] for p, v in zip(ids_l, valid_l)])
         return xs
+
+    def _pre_chunk(self, carry: dict) -> dict:
+        """Page the upcoming chunk union's rows in (paged banks only)."""
+        prep = getattr(self.r.algo, "prepare_cohort", None)
+        if prep is None or self._last_union is None:
+            return carry
+        return {**carry, "state": prep(carry["state"], self._last_union)}
 
     def _flush(self, t0: int, t1: int, ys: dict, carry: dict) -> None:
         """Reconstruct per-round history (and τ stats) from the stacked ys.
@@ -291,4 +319,5 @@ class ScanDriver:
             chunk_fn=self._chunk_fn,
             build_xs=lambda t0, t1: self._build_xs(t0, t1, participation),
             writeback=self._writeback, flush=self._flush,
-            sync_rounds=evals, on_sync=on_sync)
+            sync_rounds=evals, on_sync=on_sync,
+            pre_chunk=self._pre_chunk if self.r.cohort_mode else None)

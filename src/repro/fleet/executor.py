@@ -20,6 +20,8 @@ in tests/test_fleet.py.
 What is and is not vmappable (docs/architecture.md §7):
   * dense algorithms (MIFA array/delta/int8, FedAvg baselines)   — yes
   * BankedMIFA over DenseBank (jittable)                         — yes
+  * BankedMIFA over PagedDeviceBank (jittable; one residency map
+    shared across trials, paged in per round / chunk union)      — yes
   * BankedMIFA over HostBank / Int8PagedBank (host-offloaded)    — no; these
     live outside jit by design, run those trials sequentially.
 
@@ -150,8 +152,10 @@ class FleetRunner:
         if self.cohort_mode:
             if not getattr(algo.bank, "jittable", False):
                 raise NotImplementedError(
-                    "the vmapped fleet path needs a jittable bank "
-                    "(DenseBank); host-offloaded backends run sequentially")
+                    f"{type(algo.bank).__name__} is host-offloaded "
+                    "(jittable=False); the vmapped fleet path needs a "
+                    "jittable bank — DenseBank ('dense') or PagedDeviceBank "
+                    "('paged_device') — otherwise run trials sequentially")
             updates_fn = make_cohort_update_fn(model, batcher.k_steps,
                                                weight_decay)
 
@@ -348,6 +352,11 @@ class FleetRunner:
         idx = inv.reshape(K, cap).astype(np.int32)
         eta_loc, eta_srv = self.learning_rates(t)
         self.rngs, subs = self._split()
+        # paged banks fault the cross-trial union in before the program
+        # runs (one residency map shared by all trials); identity otherwise
+        prep = getattr(self.algo, "prepare_cohort", None)
+        if prep is not None:
+            self.state = prep(self.state, padded[valid])
         self.state, self.params, metrics = self.cohort_round_fn(
             self.state, self.params, ubatch, jnp.asarray(idx),
             jnp.asarray(padded), jnp.asarray(valid), jnp.asarray(eta_loc),
@@ -425,6 +434,9 @@ class FleetScanDriver:
         self._chunk_fn = jax.jit(
             lambda carry, xs: jax.lax.scan(vbody, carry, xs),
             donate_argnums=(0,))
+        # the upcoming chunk's cross-trial cohort union, stashed by
+        # _build_xs for the paged-bank pre_chunk residency hook
+        self._last_union = None
 
     # ------------------------------------------------------------------ #
     def _init_carry(self) -> dict:
@@ -498,7 +510,16 @@ class FleetScanDriver:
         xs["valid"] = np.stack(valid_l)
         xs["idx"] = np.stack(idx_l)
         xs["ubatch"] = jax.tree.map(lambda *ls: np.stack(ls), *batch_l)
+        self._last_union = np.concatenate(
+            [p[v] for p, v in zip(ids_l, valid_l)])
         return xs
+
+    def _pre_chunk(self, carry: dict) -> dict:
+        """Page the chunk's cross-trial union in (paged banks only)."""
+        prep = getattr(self.r.algo, "prepare_cohort", None)
+        if prep is None or self._last_union is None:
+            return carry
+        return {**carry, "state": prep(carry["state"], self._last_union)}
 
     # ------------------------------------------------------------------ #
     def run(self, n_rounds: int, *, parts=None,
@@ -527,7 +548,8 @@ class FleetScanDriver:
             chunk_fn=self._chunk_fn,
             build_xs=lambda t0, t1: self._build_xs(t0, t1, parts),
             writeback=self._writeback, flush=flush,
-            sync_rounds=evals, on_sync=on_sync)
+            sync_rounds=evals, on_sync=on_sync,
+            pre_chunk=self._pre_chunk if r.cohort_mode else None)
 
 
 def make_fleet_eval(model, eval_batch: dict) -> Callable:

@@ -183,3 +183,238 @@ def bank_scatter_batched(banks: jnp.ndarray, updates: jnp.ndarray,
         valid.astype(jnp.int32), block_m=block_m,
         interpret=resolve_interpret(interpret))
     return new_banks, dsum[:, 0]
+
+
+# --------------------------------------------------------------------------- #
+# paged variants: rows addressed through a page-table indirection
+# --------------------------------------------------------------------------- #
+#
+# The paged device bank (bank/paged_device.py) stores rows in fixed-size
+# physical pages: logical row `lid` lives at physical row
+#
+#     page_table[lid // page_size] * page_size + lid % page_size
+#
+# The page table rides the scan carry as a plain int32 array, so it arrives
+# here via scalar prefetch exactly like the row ids — the page LOOKUP happens
+# inside the BlockSpec index map, before the kernel body runs. Non-resident
+# logical pages map to the dedicated dummy slot (the caller's sentinel), so a
+# stray access reads zeros and writes are no-ops; the bank's `prepare` hook
+# guarantees every *valid* row is resident before a round executes.
+#
+# The kernel bodies are identical to the flat kernels above (read old,
+# accumulate the masked delta, write the fresh update back in place) — only
+# the addressing differs, which is exactly why paged trajectories stay
+# fp32 bit-exact against the flat bank: reductions run over the cohort axis,
+# never over physical rows, so slot placement can never change a value.
+
+
+def _paged_kernel(pt_ref, lids_ref, valid_ref, u_ref, pages_ref,
+                  pages_out_ref, dsum_ref):
+    a = pl.program_id(1)
+    valid = valid_ref[a] > 0
+    old = pages_ref[...]                                  # (1, bm) page dtype
+    u = u_ref[...]                                        # (1, bm) f32
+
+    @pl.when(a == 0)
+    def _init():
+        dsum_ref[...] = jnp.zeros_like(dsum_ref)
+
+    u_st = u.astype(pages_ref.dtype)
+    dsum_ref[...] += jnp.where(
+        valid, u_st.astype(jnp.float32) - old.astype(jnp.float32), 0.0)
+    pages_out_ref[...] = jnp.where(valid, u_st, old)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "block_m", "interpret"))
+def _paged_bank_scatter(pages, updates, page_table, lids, valid, *,
+                        page_size, block_m, interpret):
+    r, m = pages.shape
+    c = updates.shape[0]
+    ps = page_size
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    assert updates.shape == (c, m), (updates.shape, (c, m))
+    assert lids.shape == valid.shape == (c,), (lids.shape, valid.shape)
+
+    # the page lookup IS the index map: scalar-prefetched page_table + lids
+    # resolve each cohort slot to its physical row before the body runs
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                            # pt, lids, valid
+        grid=(m // bm, c),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda j, a, pt, lids, valid: (a, j)),
+            pl.BlockSpec(
+                (1, bm),
+                lambda j, a, pt, lids, valid:
+                    (pt[lids[a] // ps] * ps + lids[a] % ps, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, bm),
+                lambda j, a, pt, lids, valid:
+                    (pt[lids[a] // ps] * ps + lids[a] % ps, j)),
+            pl.BlockSpec((1, bm), lambda j, a, pt, lids, valid: (0, j)),
+        ],
+    )
+    return pl.pallas_call(
+        _paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, m), pages.dtype),
+                   jax.ShapeDtypeStruct((1, m), jnp.float32)],
+        input_output_aliases={4: 0},                      # pages in place
+        interpret=interpret,
+    )(page_table, lids, valid, updates, pages)
+
+
+def paged_bank_scatter(pages: jnp.ndarray, updates: jnp.ndarray,
+                       page_table: jnp.ndarray, lids: jnp.ndarray,
+                       valid: jnp.ndarray, *, page_size: int,
+                       block_m: int = 512, interpret: bool | None = None):
+    """Fused gather/delta/scatter through a page-table indirection.
+
+    pages (R, M) with R = (slots+1)·page_size; updates (C, M) f32;
+    page_table (P,) int32 slot per logical page (sentinel -> dummy slot);
+    lids (C,) int32 *sanitized* logical rows (pad slots already remapped to
+    the dummy logical page by the caller); valid (C,) bool. Returns
+    (new_pages, delta_sum (M,) f32) — per slot exactly `bank_scatter` on the
+    physically-addressed rows.
+    """
+    new_pages, dsum = _paged_bank_scatter(
+        pages, updates.astype(jnp.float32), page_table.astype(jnp.int32),
+        lids.astype(jnp.int32), valid.astype(jnp.int32),
+        page_size=page_size, block_m=block_m,
+        interpret=resolve_interpret(interpret))
+    return new_pages, dsum[0]
+
+
+def _paged_gather_kernel(pt_ref, lids_ref, pages_ref, out_ref):
+    del pt_ref, lids_ref
+    out_ref[...] = pages_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "block_m", "interpret"))
+def _paged_bank_gather(pages, page_table, lids, *, page_size, block_m,
+                       interpret):
+    r, m = pages.shape
+    c = lids.shape[0]
+    ps = page_size
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                            # pt, lids
+        grid=(m // bm, c),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bm),
+                lambda j, a, pt, lids:
+                    (pt[lids[a] // ps] * ps + lids[a] % ps, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda j, a, pt, lids: (a, j)),
+        ],
+    )
+    (out,) = pl.pallas_call(
+        _paged_gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((c, m), jnp.float32)],
+        interpret=interpret,
+    )(page_table, lids, pages)
+    return out
+
+
+def paged_bank_gather(pages: jnp.ndarray, page_table: jnp.ndarray,
+                      lids: jnp.ndarray, *, page_size: int,
+                      block_m: int = 512, interpret: bool | None = None):
+    """Row gather through the page table: (C, M) f32 rows for `lids`.
+
+    Non-resident logical pages read the dummy slot (exact zeros by the
+    bank's invariant); the caller masks or `prepare`s as needed.
+    """
+    return _paged_bank_gather(
+        pages, page_table.astype(jnp.int32), lids.astype(jnp.int32),
+        page_size=page_size, block_m=block_m,
+        interpret=resolve_interpret(interpret))
+
+
+def _paged_kernel_batched(pt_ref, lids_ref, valid_ref, u_ref, pages_ref,
+                          pages_out_ref, dsum_ref):
+    k = pl.program_id(0)
+    a = pl.program_id(2)
+    valid = valid_ref[k, a] > 0
+    old = pages_ref[...]                                  # (1, 1, bm)
+    u = u_ref[...]                                        # (1, 1, bm) f32
+
+    @pl.when(a == 0)
+    def _init():
+        dsum_ref[...] = jnp.zeros_like(dsum_ref)
+
+    u_st = u.astype(pages_ref.dtype)
+    dsum_ref[...] += jnp.where(
+        valid, u_st.astype(jnp.float32) - old.astype(jnp.float32), 0.0)
+    pages_out_ref[...] = jnp.where(valid, u_st, old)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "block_m", "interpret"))
+def _paged_bank_scatter_batched(pages, updates, page_table, lids, valid, *,
+                                page_size, block_m, interpret):
+    K, r, m = pages.shape
+    c = updates.shape[1]
+    ps = page_size
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    assert updates.shape == (K, c, m), (updates.shape, (K, c, m))
+    assert lids.shape == valid.shape == (K, c), (lids.shape, valid.shape)
+
+    def _prow(k, a, pt, lids):
+        return pt[k, lids[k, a] // ps] * ps + lids[k, a] % ps
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                            # pt, lids, valid
+        grid=(K, m // bm, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, pt, lids, valid: (k, a, j)),
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, pt, lids, valid:
+                             (k, _prow(k, a, pt, lids), j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, pt, lids, valid:
+                             (k, _prow(k, a, pt, lids), j)),
+            pl.BlockSpec((1, 1, bm),
+                         lambda k, j, a, pt, lids, valid: (k, 0, j)),
+        ],
+    )
+    return pl.pallas_call(
+        _paged_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((K, r, m), pages.dtype),
+                   jax.ShapeDtypeStruct((K, 1, m), jnp.float32)],
+        input_output_aliases={4: 0},                      # pages in place
+        interpret=interpret,
+    )(page_table, lids, valid, updates, pages)
+
+
+def paged_bank_scatter_batched(pages: jnp.ndarray, updates: jnp.ndarray,
+                               page_table: jnp.ndarray, lids: jnp.ndarray,
+                               valid: jnp.ndarray, *, page_size: int,
+                               block_m: int = 512,
+                               interpret: bool | None = None):
+    """Grid-axis batched `paged_bank_scatter` for the fleet executor.
+
+    pages (K, R, M); updates (K, C, M) f32; page_table (K, P) int32 (the
+    fleet keeps identical per-trial copies — one shared residency mapping);
+    lids/valid (K, C). Returns (new_pages (K, R, M), delta_sum (K, M) f32),
+    per trial k exactly `paged_bank_scatter(pages[k], ...)`.
+    """
+    new_pages, dsum = _paged_bank_scatter_batched(
+        pages, updates.astype(jnp.float32), page_table.astype(jnp.int32),
+        lids.astype(jnp.int32), valid.astype(jnp.int32),
+        page_size=page_size, block_m=block_m,
+        interpret=resolve_interpret(interpret))
+    return new_pages, dsum[:, 0]

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.backend import resolve_interpret, use_pallas  # noqa: F401
-from repro.kernels.bank_scatter import bank_scatter, bank_scatter_batched
+from repro.kernels.bank_scatter import (bank_scatter, bank_scatter_batched,
+                                        paged_bank_gather, paged_bank_scatter,
+                                        paged_bank_scatter_batched)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mifa_aggregate import mifa_aggregate
 from repro.kernels.ssd_scan import ssd_scan
@@ -193,6 +195,128 @@ def fleet_bank_update_tree_pure(rows_tree, upd_tree, ids, valid, *,
     return _fleet_bank_update_tree_body(rows_tree, upd_tree, ids, valid,
                                         block_m=block_m,
                                         interpret=resolve_interpret(interpret))
+
+
+def _paged_bank_update_tree_body(pages_tree, upd_tree, page_table, lids,
+                                 valid, *, page_size, block_m, interpret):
+    def one(pages, u):
+        r, c = pages.shape[0], u.shape[0]
+        m_raw = int(np.prod(pages.shape[1:]))
+        if m_raw <= _BANK_SINGLE_BLOCK:
+            pages2, m = pages.reshape(r, -1), m_raw
+            u2 = u.reshape(c, -1)
+            bm = m_raw
+        else:
+            pages2, m = _pad_to(pages.reshape(r, -1), block_m)
+            u2, _ = _pad_to(u.reshape(c, -1), block_m)
+            bm = min(block_m, pages2.shape[1])
+        pn, ds = paged_bank_scatter(pages2, u2, page_table, lids, valid,
+                                    page_size=page_size, block_m=bm,
+                                    interpret=interpret)
+        return (pn[:, :m].reshape(pages.shape),
+                ds[:m].reshape(pages.shape[1:]))
+
+    out = jax.tree.map(one, pages_tree, upd_tree)
+    pages_new = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+    dsum = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda o: isinstance(o, tuple))
+    return pages_new, dsum
+
+
+_paged_bank_update_tree = functools.partial(
+    jax.jit, static_argnames=("page_size", "block_m", "interpret"))(
+        _paged_bank_update_tree_body)
+
+
+def paged_bank_update_tree(pages_tree, upd_tree, page_table, lids, valid, *,
+                           page_size: int, block_m: int = 512,
+                           interpret: bool | None = None):
+    """Fused cohort bank update through a page-table indirection.
+
+    pages_tree: leaves (R, *shape) with R = (slots+1)·page_size; upd_tree:
+    leaves (C, *shape) f32; page_table (P,) int32; lids (C,) int32 sanitized
+    logical rows (pad slots -> dummy logical page); valid (C,) bool.
+    Returns (new_pages_tree, delta_sum_tree with leaves (*shape,) f32).
+    """
+    return _paged_bank_update_tree(pages_tree, upd_tree, page_table, lids,
+                                   valid, page_size=page_size,
+                                   block_m=block_m,
+                                   interpret=resolve_interpret(interpret))
+
+
+def paged_bank_update_tree_pure(pages_tree, upd_tree, page_table, lids,
+                                valid, *, page_size: int, block_m: int = 512,
+                                interpret: bool | None = None):
+    """Un-jitted `paged_bank_update_tree` (see `bank_update_tree_pure`) —
+    what the paged bank traces inside scan bodies and fleet programs."""
+    return _paged_bank_update_tree_body(
+        pages_tree, upd_tree, page_table, lids, valid, page_size=page_size,
+        block_m=block_m, interpret=resolve_interpret(interpret))
+
+
+def fleet_paged_bank_update_tree_pure(pages_tree, upd_tree, page_table, lids,
+                                      valid, *, page_size: int,
+                                      block_m: int = 512,
+                                      interpret: bool | None = None):
+    """Batched (K-trial) paged bank update, un-jitted.
+
+    pages_tree: leaves (K, R, *shape); upd_tree: leaves (K, C, *shape) f32;
+    page_table (K, P); lids/valid (K, C). Per trial identical to
+    `paged_bank_update_tree`.
+    """
+    interpret = resolve_interpret(interpret)
+
+    def one(pages, u):
+        K, r = pages.shape[0], pages.shape[1]
+        c = u.shape[1]
+        m_raw = int(np.prod(pages.shape[2:]))
+        if m_raw <= _BANK_SINGLE_BLOCK:
+            pages2, m = pages.reshape(K, r, -1), m_raw
+            u2 = u.reshape(K, c, -1)
+            bm = m_raw
+        else:
+            pages2, m = _pad_to(pages.reshape(K, r, -1), block_m)
+            u2, _ = _pad_to(u.reshape(K, c, -1), block_m)
+            bm = min(block_m, pages2.shape[2])
+        pn, ds = paged_bank_scatter_batched(pages2, u2, page_table, lids,
+                                            valid, page_size=page_size,
+                                            block_m=bm, interpret=interpret)
+        return (pn[:, :, :m].reshape(pages.shape),
+                ds[:, :m].reshape((K,) + pages.shape[2:]))
+
+    out = jax.tree.map(one, pages_tree, upd_tree)
+    pages_new = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda o: isinstance(o, tuple))
+    dsum = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda o: isinstance(o, tuple))
+    return pages_new, dsum
+
+
+def paged_bank_gather_tree_pure(pages_tree, page_table, lids, *,
+                                page_size: int, block_m: int = 512,
+                                interpret: bool | None = None):
+    """Row gather through the page table over a pytree: leaves (C, *shape)
+    f32 for the requested logical rows (non-resident pages read the dummy
+    slot's zeros). Un-jitted, for callers already inside a trace."""
+    interpret = resolve_interpret(interpret)
+
+    def one(pages):
+        r = pages.shape[0]
+        c = lids.shape[0]
+        m_raw = int(np.prod(pages.shape[1:]))
+        if m_raw <= _BANK_SINGLE_BLOCK:
+            pages2, m = pages.reshape(r, -1), m_raw
+            bm = m_raw
+        else:
+            pages2, m = _pad_to(pages.reshape(r, -1), block_m)
+            bm = min(block_m, pages2.shape[1])
+        rows = paged_bank_gather(pages2, page_table, lids,
+                                 page_size=page_size, block_m=bm,
+                                 interpret=interpret)
+        return rows[:, :m].reshape((c,) + pages.shape[1:])
+
+    return jax.tree.map(one, pages_tree)
 
 
 def attention(q, k, v, *, causal=True, block_q=128, block_k=128,

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.bank import (BankedMIFA, DenseBank, HostBank, Int8PagedBank,
-                        MemoryBank, make_bank)
+                        MemoryBank, PagedDeviceBank, make_bank)
 from repro.configs import get_config
 from repro.core import MIFA, BernoulliParticipation, run_fl
 from repro.core.runner import RoundRunner, _pow2_bucket
@@ -62,7 +62,7 @@ def _random_rounds(bank: MemoryBank, rounds=6, seed=0, needs_rng=False):
 # backend <-> dense MIFA equivalence
 # --------------------------------------------------------------------------- #
 
-@pytest.mark.parametrize("backend", ["dense", "host"])
+@pytest.mark.parametrize("backend", ["dense", "host", "paged_device"])
 def test_fp32_backends_match_dense_mifa_mean(backend):
     bank = make_bank(backend)
     bs, dense_mean = _random_rounds(bank)
@@ -82,7 +82,8 @@ def test_int8_paged_close_to_dense_mifa_mean():
 
 @pytest.mark.parametrize("backend,kwargs",
                          [("dense", {}), ("host", {}),
-                          ("int8_paged", {"page_size": 4})])
+                          ("int8_paged", {"page_size": 4}),
+                          ("paged_device", {"page_size": 4})])
 def test_gsum_is_sum_of_rows(backend, kwargs):
     """The delta identity maintains G_sum == Σ_i gather(i) exactly."""
     bank = make_bank(backend, **kwargs)
@@ -97,7 +98,8 @@ def test_gsum_is_sum_of_rows(backend, kwargs):
 def test_scatter_only_touches_cohort_rows():
     key = jax.random.PRNGKey(3)
     params = _tree(key)
-    for bank in (DenseBank(), HostBank(), Int8PagedBank(page_size=2)):
+    for bank in (DenseBank(), HostBank(), Int8PagedBank(page_size=2),
+                 PagedDeviceBank(page_size=2, n_slots=3)):
         bs = bank.init(params, N)
         ids0 = np.array([1, 4])
         bs = bank.scatter(bs, ids0, _cohort_updates(key, ids0),
@@ -123,7 +125,10 @@ def test_padded_slots_are_inert():
         cu)
     valid = np.array([True, True, False, False])
     for backend, kwargs in (("dense", {}), ("host", {}),
-                            ("int8_paged", {"page_size": 4})):
+                            ("int8_paged", {"page_size": 4}),
+                            ("paged_device", {"page_size": 4}),
+                            ("paged_device", {"page_size": 4,
+                                              "dtype": "int8"})):
         rng = jax.random.fold_in(key, 1)
         b1 = make_bank(backend, **kwargs)
         s1 = b1.scatter(b1.init(params, N), ids, cu, rng=rng)
@@ -187,7 +192,7 @@ def test_make_bank_rejects_unknown():
 # cohort round path through RoundRunner / run_fl
 # --------------------------------------------------------------------------- #
 
-@pytest.mark.parametrize("backend", ["dense", "host"])
+@pytest.mark.parametrize("backend", ["dense", "host", "paged_device"])
 def test_banked_run_fl_matches_dense_mifa_trajectory(backend, tiny_problem):
     """Acceptance property: same params AND same per-round history."""
     model, batcher = tiny_problem(n_clients=10)
@@ -268,7 +273,8 @@ def test_duplicate_cohort_ids_rejected(tiny_problem):
     dup = np.array([1, 1, 4])
     cu = _cohort_updates(key, dup)
     for backend, kwargs in (("dense", {}), ("host", {}),
-                            ("int8_paged", {"page_size": 4})):
+                            ("int8_paged", {"page_size": 4}),
+                            ("paged_device", {"page_size": 4})):
         bank = make_bank(backend, **kwargs)
         bs = bank.init(params, N)
         with pytest.raises(ValueError, match="duplicate"):
@@ -287,7 +293,7 @@ def test_duplicate_check_is_enforced_in_base_scatter():
     """The check lives in MemoryBank.scatter (template method) — backends
     implement `_scatter_rows` and MUST NOT override `scatter`, or they
     silently drift out from under the shared validation."""
-    for cls in (DenseBank, HostBank, Int8PagedBank):
+    for cls in (DenseBank, HostBank, Int8PagedBank, PagedDeviceBank):
         assert cls.scatter is MemoryBank.scatter, cls
         assert cls._scatter_rows is not MemoryBank._scatter_rows, cls
 
@@ -348,3 +354,99 @@ def test_sharded_dense_bank_smoke():
     for a, b in zip(jax.tree.leaves(bank.mean_g(bs)),
                     jax.tree.leaves(ref.mean_g(rs))):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# paged device bank: eviction, determinism, page-table invariants
+# --------------------------------------------------------------------------- #
+
+# Cohorts chosen so that, at page_size=2 / n_slots=2, every round fits in the
+# slot budget but the sequence as a whole forces evictions and refaults.
+_EVICT_COHORTS = [[0, 1], [4, 5], [2, 3], [0, 5], [6, 7], [1, 2], [4], [0, 7]]
+
+
+def _drive_cohorts(bank, cohorts, seed=3, needs_rng=False):
+    """Scatter a fixed cohort sequence; return (state, per-round mean_g)."""
+    key = jax.random.PRNGKey(seed)
+    params = _tree(key)
+    bs = bank.init(params, N)
+    means = []
+    for t, ids in enumerate(cohorts):
+        ids = np.array(ids)
+        k = jax.random.fold_in(key, t)
+        rng = jax.random.fold_in(k, 1) if needs_rng else None
+        bs = bank.scatter(bs, ids, _cohort_updates(k, ids), rng=rng)
+        means.append(bank.mean_g(bs))
+    return bs, means
+
+
+def test_paged_eviction_matches_dense():
+    """Evicting paged bank is bit-exact vs DenseBank: physical placement is
+    invisible because reductions run over the cohort axis, never slots."""
+    paged = PagedDeviceBank(page_size=2, n_slots=2)
+    dense = DenseBank()
+    ps, pm = _drive_cohorts(paged, _EVICT_COHORTS)
+    ds, dm = _drive_cohorts(dense, _EVICT_COHORTS)
+    assert paged.faults > 0 and paged.evictions > 0
+    for a, b in zip(jax.tree.leaves(pm), jax.tree.leaves(dm)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(paged.gather(ps, np.arange(N))),
+                    jax.tree.leaves(dense.gather(ds, np.arange(N)))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_eviction_refault_determinism():
+    """Same cohort sequence twice => identical trajectory AND identical
+    fault/eviction counters (deterministic LRU, no tie-break wobble)."""
+    runs = []
+    for _ in range(2):
+        bank = PagedDeviceBank(page_size=2, n_slots=2)
+        bs, means = _drive_cohorts(bank, _EVICT_COHORTS)
+        runs.append((bank, bank.gather(bs, np.arange(N)), means))
+    (b1, g1, m1), (b2, g2, m2) = runs
+    assert (b1.faults, b1.evictions) == (b2.faults, b2.evictions)
+    assert b1.faults > 0 and b1.evictions > 0
+    for a, b in zip(jax.tree.leaves((g1, m1)), jax.tree.leaves((g2, m2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_page_table_invariants_after_eviction():
+    """No aliased slots, free-list conservation, dummy page pinned at zero —
+    checked after an eviction-heavy sequence."""
+    bank = PagedDeviceBank(page_size=2, n_slots=2)
+    bs, _ = _drive_cohorts(bank, _EVICT_COHORTS)
+    bank.check_invariants(bs)
+    assert bank.n_resident() <= 2
+
+
+def test_paged_working_set_overflow_raises():
+    bank = PagedDeviceBank(page_size=2, n_slots=2)
+    key = jax.random.PRNGKey(0)
+    bs = bank.init(_tree(key), N)
+    ids = np.array([0, 2, 4])        # spans 3 pages, only 2 slots
+    with pytest.raises(ValueError, match="slots"):
+        bank.scatter(bs, ids, _cohort_updates(key, ids))
+
+
+def test_paged_device_bytes_bounded_by_slots():
+    """Device page-pool bytes depend on n_slots, not on n_clients."""
+    key = jax.random.PRNGKey(0)
+    params = _tree(key)
+    small = PagedDeviceBank(page_size=2, n_slots=2)
+    big = PagedDeviceBank(page_size=2, n_slots=2)
+    ss = small.init(params, N)
+    sb = big.init(params, 64 * N)
+    assert (small.memory_bytes(ss)["device_pages"]
+            == big.memory_bytes(sb)["device_pages"])
+
+
+def test_paged_pallas_path_matches_jnp():
+    b1 = PagedDeviceBank(page_size=2, n_slots=2, use_pallas=False)
+    b2 = PagedDeviceBank(page_size=2, n_slots=2, use_pallas=True)
+    s1, m1 = _drive_cohorts(b1, _EVICT_COHORTS)
+    s2, m2 = _drive_cohorts(b2, _EVICT_COHORTS)
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(b1.gather(s1, np.arange(N))),
+                    jax.tree.leaves(b2.gather(s2, np.arange(N)))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.bank import BankedMIFA, DenseBank, HostBank
+from repro.bank import BankedMIFA, DenseBank, HostBank, PagedDeviceBank
 from repro.core import (MIFA, BiasedFedAvg, FedAvgSampling,
                         TraceParticipation, run_fl)
 from repro.fleet import (FleetRunner, Trial, expand_grid, make_fleet_eval,
@@ -33,6 +33,7 @@ N, T, K = 6, 4, 3
 ALGOS = {
     "mifa_array": (lambda: MIFA(memory="array"), False),
     "banked_dense": (lambda: BankedMIFA(DenseBank()), False),
+    "banked_paged": (lambda: BankedMIFA(PagedDeviceBank(page_size=2)), False),
     "fedavg": (lambda: BiasedFedAvg(), False),
     "wait_for_s": (lambda: FedAvgSampling(s=3), True),
 }

@@ -77,3 +77,41 @@ def test_tree_roundtrip_matches_leafwise():
         err = np.abs(np.asarray(leaf) - np.asarray(orig)).reshape(n, -1)
         assert np.all(err <= quantum[:, None] + 1e-12)
     assert all(leaf.dtype == jnp.int8 for leaf in jax.tree.leaves(qt))
+
+
+def test_int8_paged_device_gather_roundtrip_bound():
+    """Under PagedDeviceBank(dtype='int8'), gather returns each stored row
+    within one quantum of the scattered update — and the bound survives a
+    spill to host and refault, because pages spill as int8 + scales."""
+    from repro.bank import PagedDeviceBank
+    key = jax.random.PRNGKey(5)
+    n, ps = 8, 2
+    params = {"w": jax.random.normal(key, (4, 3)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (3,))}
+    bank = PagedDeviceBank(page_size=ps, n_slots=2, dtype="int8")
+    bs = bank.init(params, n)
+
+    def updates(k, ids):
+        return jax.tree.map(
+            lambda p: jax.random.normal(k, (len(ids),) + p.shape), params)
+
+    ids0 = np.array([0, 1, 4])                  # pages 0 and 2
+    u0 = updates(jax.random.fold_in(key, 2), ids0)
+    bs = bank.scatter(bs, ids0, u0, rng=jax.random.fold_in(key, 3))
+
+    def check(got, want):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            g, w = np.asarray(g), np.asarray(w)
+            m = len(ids0)
+            quantum = np.abs(w.reshape(m, -1)).max(1) / 127.0
+            err = np.abs(g - w).reshape(m, -1)
+            assert np.all(err <= quantum[:, None] + 1e-12)
+
+    check(bank.gather(bs, ids0), u0)
+
+    # force pages 0 and 2 to spill, then refault them via a fresh gather
+    ids1 = np.array([2, 6])                     # pages 1 and 3 evict 0 and 2
+    bs = bank.scatter(bs, ids1, updates(jax.random.fold_in(key, 4), ids1),
+                      rng=jax.random.fold_in(key, 5))
+    assert bank.evictions > 0
+    check(bank.gather(bs, ids0), u0)

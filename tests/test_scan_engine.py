@@ -22,7 +22,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.bank import BankedMIFA, DenseBank, HostBank
+from repro.bank import BankedMIFA, DenseBank, HostBank, PagedDeviceBank
 from repro.core import (MIFA, BiasedFedAvg, FedAvgSampling,
                         TraceParticipation, run_fl)
 from repro.core.scan_engine import chunk_bounds
@@ -35,6 +35,7 @@ ALGOS = {
     "mifa_array": lambda: MIFA(memory="array"),
     "mifa_int8": lambda: MIFA(memory="int8"),
     "banked_dense": lambda: BankedMIFA(DenseBank()),
+    "banked_paged": lambda: BankedMIFA(PagedDeviceBank(page_size=4)),
     "fedavg": lambda: BiasedFedAvg(),
 }
 
@@ -192,6 +193,72 @@ def test_scan_cohort_capacity_overflow_raises(tiny_problem):
         run_fl(algo=BankedMIFA(DenseBank()), engine="scan",
                participation=TraceParticipation(np.ones((T, N), bool)),
                **kw)
+
+
+# --------------------------------------------------------------------------- #
+# paged device bank under scan: eviction, chunk-union residency, messages
+# --------------------------------------------------------------------------- #
+
+class _RawTrace:
+    """Trace participation without TraceParticipation's forced all-active
+    round 0 — eviction tests need sparse cohorts from the first round."""
+
+    def __init__(self, trace):
+        self.trace = np.asarray(trace, bool)
+        self.n = self.trace.shape[1]
+
+    def sample(self, t):
+        return self.trace[t]
+
+
+def _paged_trace():
+    """Cohorts that, at page_size=2 / n_slots=2, fit per round but force
+    evictions and refaults across the run."""
+    cohorts = [[0, 1], [4, 5], [2, 3], [0, 5], [2], [1, 3], [4], [0, 2]]
+    tr = np.zeros((len(cohorts), N), bool)
+    for t, ids in enumerate(cohorts):
+        tr[t, ids] = True
+    return tr
+
+
+def test_scan_paged_eviction_bitexact_vs_loop(tiny_problem):
+    """With pages spilling and refaulting on different schedules, loop and
+    scan still match DenseBank bit-for-bit: physical slots are invisible."""
+    tr = _paged_trace()
+    kw = _kw(tiny_problem, n_rounds=len(tr), cohort_capacity=2)
+    paged = lambda: BankedMIFA(PagedDeviceBank(page_size=2, n_slots=2))
+    ref = run_fl(algo=BankedMIFA(DenseBank()), engine="loop",
+                 participation=_RawTrace(tr), **kw)
+    loop = run_fl(algo=paged(), engine="loop",
+                  participation=_RawTrace(tr), **kw)
+    scan = run_fl(algo=paged(), engine="scan", scan_chunk=1,
+                  participation=_RawTrace(tr), **kw)
+    _assert_same(ref, loop)
+    _assert_same(loop, scan)
+
+
+def test_scan_paged_chunk_union_overflow_raises(tiny_problem):
+    """Under scan, residency is prepared per *chunk union*; a union wider
+    than the slot budget must fail with actionable advice, not corrupt."""
+    tr = _paged_trace()
+    kw = _kw(tiny_problem, n_rounds=len(tr), cohort_capacity=2)
+    with pytest.raises(ValueError, match="slots"):
+        run_fl(algo=BankedMIFA(PagedDeviceBank(page_size=2, n_slots=2)),
+               engine="scan", scan_chunk=2,
+               participation=_RawTrace(tr), **kw)
+
+
+def test_scan_fallback_warning_names_capable_backends(tiny_problem):
+    """The fallback warning must name the blocking backend and the banks
+    that do support scan, so users know what to switch to."""
+    kw = _kw(tiny_problem)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run_fl(algo=BankedMIFA(HostBank()), engine="scan",
+               scenario=_ge(), **kw)
+    msg = next(str(x.message) for x in w if "falling back" in str(x.message))
+    assert "HostBank" in msg
+    assert "DenseBank" in msg and "PagedDeviceBank" in msg
 
 
 # --------------------------------------------------------------------------- #
