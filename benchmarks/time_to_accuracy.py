@@ -1,148 +1,360 @@
-"""Wall-clock time-to-accuracy: MIFA's impatient server vs. straggler-bound
-round policies, on the discrete-event runtime simulator (repro.sim).
+"""Simulated wall-clock time-to-accuracy under the compiled runtime simulator.
 
 The paper's headline is about *time*, not rounds: the server "efficiently
-avoids excessive latency induced by inactive devices". Here every client gets
-a tiered shifted-exponential round-trip latency and an availability process,
-and we measure simulated seconds to a target eval loss under four server
-policies:
+avoids excessive latency induced by inactive devices". This benchmark has
+two sections, both on the simulated-seconds axis:
 
-  wait_for_all    broadcast, block for every device (incl. blacked-out ones)
-  wait_for_s      paper Eq. 3: sample S, block until all S respond
-  deadline        broadcast, fixed deadline, drop late responders (biased)
-  impatient_mifa  MIFA: close with whoever is available; memory de-biases
+Section A — engine speedup. The SAME simulated run (Impatient + MIFA under
+jit-native Bernoulli availability and tiered shifted-exponential latency)
+through the discrete-event heap engine (`repro.sim.engine`, one Python
+event loop + one jitted dispatch per round) and the compiled simulator
+(`repro.sim.compiled`, the whole event flow — clock, epoch window, policy
+resolve — inside jit(scan)). Trajectories are asserted BIT-EXACT (same f32
+close times, same losses), so the recorded speedup buys nothing but wall
+clock. Steady-state methodology as in scan_scale.py: median per-round
+(heap) vs median per-chunk (compiled) with compile time reported
+separately. The fast variant feeds the CI regression gate
+(benchmarks/baselines/ci_baseline.json pins the speedup floor and the
+deterministic final loss).
 
-plus `impatient_biased` (impatient server WITHOUT memory) to isolate the
-memory contribution. Availability: Bernoulli (label-correlated), adversarial
-periodic blackouts, and a sticky-Markov trace replay.
+Section B — the time-to-accuracy sweep the subsystem exists for: seeds ×
+server policies (wait_for_all, wait_for_s, deadline, impatient, buffered
+K-of-N) as ONE jit(scan(vmap(body))) program per scenario family
+(`repro.fleet.run_sim_fleet`), under staged-blackout and cluster-correlated
+outage availability. Batches are drawn IN-program
+(`JitProceduralBatcher.batch_fn`), so the full mode runs N=10⁵ devices per
+lane without the host ever materialising a batch stack. Reports simulated
+seconds to the target eval loss per policy (median across seeds).
 
-Artifact: benchmarks/artifacts/time_to_accuracy.json with per-policy eval
-curves on the simulated-seconds axis and seconds-to-target per process.
+Artifacts: benchmarks/artifacts/time_to_accuracy.{json,md}.
 """
 from __future__ import annotations
 
+import os
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
-from adversarial import make_adversarial
-from common import emit, paper_problem, save_artifact
+from common import ARTIFACTS, emit, save_artifact
 
-from repro.core import (MIFA, BernoulliParticipation, BiasedFedAvg,
-                        RoundRunner, TraceParticipation)
-from repro.optim import inv_t
-from repro.sim import (Deadline, FedSimEngine, Impatient, SimConfig,
-                       WaitForAll, WaitForS, tiered_shifted_exponential)
+from repro.core import MIFA, FedBuffAvg, RoundRunner
+from repro.data import JitProceduralBatcher
+from repro.fleet import SimTrial, make_fleet_eval, run_sim_fleet
+from repro.models.layers import softmax_cross_entropy
+from repro.scenarios import Bernoulli, ClusterCorrelated, StagedBlackout
+from repro.sim import (BufferedKofN, Deadline, FedSimEngine, Impatient,
+                       SimConfig, SimScanDriver, SimSpec, WaitForAll,
+                       WaitForS, tiered_shifted_exponential)
+from repro.sim.compiled import init_sim_carry
 
-TARGET_LOSS = 1.30          # logistic 10-class starts near ln(10) ≈ 2.30
+DIM, CLASSES = 16, 2
+TARGET_LOSS = 0.42
+EPOCH_S = 4.0
 
 
-def markov_trace(n: int, rounds: int, *, p_drop=0.15, p_return=0.35,
-                 seed: int = 0) -> np.ndarray:
-    """Sticky on/off Markov availability — the non-stationary trace regime.
-    Slow third drops more and returns less (correlated with the latency tiers)."""
-    rng = np.random.default_rng(seed)
-    drop = np.full(n, p_drop)
-    ret = np.full(n, p_return)
-    drop[: n // 3] = 3 * p_drop
-    ret[: n // 3] = p_return / 2
-    trace = np.ones((rounds, n), bool)
+class TinyLogistic:
+    """Minimal model shim (init/loss_fn/accuracy) on DIM→CLASSES logits."""
+
+    def init(self, rng):
+        return {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+                "b": jnp.zeros((CLASSES,), jnp.float32)}
+
+    def loss_fn(self, params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return softmax_cross_entropy(logits, batch["y"]), {}
+
+    def accuracy(self, params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+
+def _batcher(n: int, seed: int = 0) -> JitProceduralBatcher:
+    return JitProceduralBatcher(n_clients=n, dim=DIM, n_classes=CLASSES,
+                                batch_size=8, k_steps=2, noise=2.5,
+                                seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# Section A: heap engine vs compiled simulator, bit-exact, steady-state
+# --------------------------------------------------------------------------- #
+
+def engine_speedup(fast: bool) -> dict:
+    n = 32 if fast else 256
+    rounds = 48 if fast else 192
+    chunk = 12 if fast else 32
+    config = SimConfig(epoch_s=EPOCH_S, max_lookahead_epochs=50)
+    batcher = _batcher(n)
+    scen = Bernoulli(0.6, n=n, seed=5)
+    lat = tiered_shifted_exponential(n, seed=7)
+    sim = SimSpec(policy=Impatient(), latency=lat, config=config)
+    make_runner = lambda: RoundRunner(
+        model=TinyLogistic(), algo=MIFA(memory="array"), batcher=batcher,
+        schedule=lambda t: 0.1, seed=0, scenario=scen)
+
+    # heap: round 0 carries the jit trace of the round step; steady state
+    # is the median per-round wall time of the Python event loop + dispatch
+    rh = make_runner()
+    eng = FedSimEngine(rh, sim.policy, scen.host_sampler(), lat, config,
+                       seed=0)
+    t0 = time.perf_counter()
+    eng.run_round(0)
+    jax.block_until_ready(rh.params)
+    heap_compile_s = time.perf_counter() - t0
+    round_times = []
     for t in range(1, rounds):
-        up = trace[t - 1]
-        stay_up = rng.random(n) >= drop
-        come_up = rng.random(n) < ret
-        trace[t] = np.where(up, stay_up, come_up)
-    return trace
+        t0 = time.perf_counter()
+        eng.run_round(t)
+        round_times.append(time.perf_counter() - t0)
+    jax.block_until_ready(rh.params)
+    heap_steady_s = float(np.sum(round_times))
+
+    # compiled: first chunk carries the scan program's compile; the rest is
+    # the pipelined chunk path (build xs + deferred flush + dispatch)
+    rs = make_runner()
+    drv = SimScanDriver(rs, sim, scan_chunk=chunk)
+    carry = init_sim_carry(rs, sim)
+    t0 = time.perf_counter()
+    xs = drv._build_xs(0, chunk)
+    carry, ys = drv._chunk_fn(carry, xs)
+    drv._writeback(carry)
+    drv._flush(0, chunk, ys, carry)
+    scan_compile_s = time.perf_counter() - t0
+    chunk_times, chunk_lens = [], []
+    pending = None
+    for c0 in range(chunk, rounds, chunk):
+        c1 = min(c0 + chunk, rounds)
+        t0 = time.perf_counter()
+        xs = drv._build_xs(c0, c1)
+        if pending is not None:
+            drv._flush(*pending)
+        carry, ys = drv._chunk_fn(carry, xs)
+        drv._writeback(carry)
+        pending = (c0, c1, ys, carry)
+        chunk_times.append(time.perf_counter() - t0)
+        chunk_lens.append(c1 - c0)
+    t0 = time.perf_counter()
+    if pending is not None:
+        drv._flush(*pending)
+    jax.block_until_ready(rs.params)
+    drain_s = time.perf_counter() - t0
+    scan_steady_s = float(np.sum(chunk_times)) + drain_s
+
+    # same simulation, not just similar timings: bit-exact close times,
+    # applied counts, and training losses
+    assert rh.hist.sim_seconds == rs.hist.sim_seconds
+    assert rh.hist.train_loss == rs.hist.train_loss
+    assert [r["n_applied"] for r in eng.round_log] == \
+           [r["n_applied"] for r in drv.round_log]
+
+    heap_rps = 1.0 / float(np.median(round_times))
+    full = [dt for dt, ln in zip(chunk_times, chunk_lens) if ln == chunk]
+    scan_rps = (chunk / float(np.median(full)) if full
+                else chunk / scan_compile_s)
+    return {"n_clients": n, "rounds": rounds, "scan_chunk": chunk,
+            "heap_compile_s": heap_compile_s,
+            "scan_compile_s": scan_compile_s,
+            "heap_total_s": heap_compile_s + heap_steady_s,
+            "scan_total_s": scan_compile_s + scan_steady_s,
+            "heap_rounds_per_s": heap_rps,
+            "scan_rounds_per_s": scan_rps,
+            "speedup": scan_rps / heap_rps,
+            "final_train_loss": rs.hist.train_loss[-1]}
 
 
-def seconds_to_target(hist, target: float) -> float | None:
+# --------------------------------------------------------------------------- #
+# Section B: seeds × policies as one compiled program per scenario family
+# --------------------------------------------------------------------------- #
+
+def _policies(n: int, seed: int) -> list[tuple[str, object]]:
+    return [
+        ("wait_for_all", WaitForAll()),
+        ("wait_for_s", WaitForS(s=max(2, n // 3), sel_seed=seed)),
+        ("deadline", Deadline(deadline_s=3.0, sel_seed=seed)),
+        ("impatient", Impatient()),
+        ("buffered", BufferedKofN(k=max(2, n // 4))),
+    ]
+
+
+def _scenario(kind: str, n: int, seed: int):
+    if kind == "blackout":
+        # staged rates sharpening mid-run: lively -> deep blackout -> partial
+        # recovery; the slow third is hit hardest in the blackout stage
+        stage = np.full((3, n), 0.85, np.float32)
+        stage[1] = 0.15
+        stage[1, : n // 3] = 0.05
+        stage[2] = 0.6
+        return StagedBlackout(stage, bounds=[8, 20], n=n, seed=seed)
+    if kind == "cluster":
+        return ClusterCorrelated(n, 8, q_fail=0.25, q_recover=0.4,
+                                 p_device=0.9, seed=seed)
+    raise ValueError(kind)
+
+
+def seconds_to_target_loss(hist, target: float) -> float | None:
+    """First simulated second at which eval loss reaches `target`."""
     for sim_t, loss, _ in hist.eval_curve():
         if loss <= target:
             return sim_t
     return None
 
 
-def run_policy(name, policy, algo, participation, *, problem, rounds,
-               epoch_s, seed=0):
-    model, batcher, eval_fn = problem
-    runner = RoundRunner(model=model, algo=algo, batcher=batcher,
-                         schedule=inv_t(1.0), weight_decay=1e-3, seed=seed)
-    latency = tiered_shifted_exponential(batcher.n_clients, seed=seed + 7)
-    engine = FedSimEngine(runner, policy, participation, latency,
-                          config=SimConfig(epoch_s=epoch_s), seed=seed + 13)
-    t0 = time.time()
-    _, hist = engine.run(rounds, eval_fn=eval_fn, eval_every=5)
-    return {
-        "policy": name,
-        "sim_seconds_total": engine.now,
-        "seconds_to_target": seconds_to_target(hist, TARGET_LOSS),
-        "eval_curve": hist.eval_curve(),
-        "final_eval_loss": hist.eval_loss[-1][1],
-        "final_eval_acc": hist.eval_acc[-1][1],
-        "tau_bar": hist.tau_bar,
-        "tau_max": hist.tau_max,
-        "mean_round_s": float(np.mean([r["duration_s"]
-                                       for r in engine.round_log])),
-        "host_seconds": time.time() - t0,
-    }
+def sweep(kind: str, *, n: int, rounds: int, seeds, chunk: int,
+          config: SimConfig, batcher, eval_fn) -> dict:
+    trials, names = [], []
+    for seed in seeds:
+        for name, policy in _policies(n, seed):
+            trials.append(SimTrial(
+                seed=seed, policy=policy,
+                scenario=_scenario(kind, n, 100 + seed),
+                latency=tiered_shifted_exponential(n, seed=7 + seed),
+                label=f"{name}/seed{seed}"))
+            names.append((name, seed))
+    t0 = time.perf_counter()
+    _, hist = run_sim_fleet(
+        model=TinyLogistic(), algo=FedBuffAvg(), batcher=batcher,
+        schedule=lambda t: 0.008, n_rounds=rounds, trials=trials,
+        config=config, scan_chunk=chunk, eval_fn=eval_fn, eval_every=5,
+        batch_fn=batcher.batch_fn())
+    host_s = time.perf_counter() - t0
 
+    lanes = {}
+    for k, (name, seed) in enumerate(names):
+        h = hist.trial(k)
+        lanes[f"{name}/seed{seed}"] = {
+            "policy": name, "seed": seed,
+            "sim_seconds_total": h.sim_seconds[-1],
+            "seconds_to_target": seconds_to_target_loss(h, TARGET_LOSS),
+            "final_eval_acc": h.eval_acc[-1][1],
+            "final_eval_loss": h.eval_loss[-1][1],
+            "eval_curve": h.eval_curve()}
+    by_policy = {}
+    for name, _ in _policies(n, 0):
+        tts = [lanes[f"{name}/seed{s}"]["seconds_to_target"] for s in seeds]
+        reached = [t for t in tts if t is not None]
+        by_policy[name] = {
+            "seconds_to_target_median": (float(np.median(reached))
+                                         if len(reached) == len(tts)
+                                         else None),
+            "reached": len(reached), "of": len(tts)}
+    return {"kind": kind, "n_clients": n, "rounds": rounds,
+            "k_lanes": len(trials), "host_seconds": host_s,
+            "by_policy": by_policy, "lanes": lanes}
+
+
+# --------------------------------------------------------------------------- #
 
 def main(fast: bool = False) -> None:
-    n_clients = 18 if fast else 24
-    rounds = 60 if fast else 120
-    epoch_s = 4.0
-    s = max(2, n_clients // 3)
+    sec_a = engine_speedup(fast)
+    emit("time_to_accuracy/engine_speedup", sec_a["scan_total_s"] * 1e6,
+         f"heap_rps={sec_a['heap_rounds_per_s']:.0f};"
+         f"scan_rps={sec_a['scan_rounds_per_s']:.0f};"
+         f"speedup={sec_a['speedup']:.1f}x;"
+         f"loss={sec_a['final_train_loss']:.4f}")
 
-    model, batcher, probs, _, eval_fn = paper_problem(
-        "paper_logistic", n_clients=n_clients, p_min=0.3)
-    problem = (model, batcher, eval_fn)
-
-    def policies():
-        return [
-            ("wait_for_all", WaitForAll(), BiasedFedAvg()),
-            ("wait_for_s", WaitForS(s=s), BiasedFedAvg()),
-            ("deadline", Deadline(deadline_s=3.0), BiasedFedAvg()),
-            ("impatient_mifa", Impatient(), MIFA(memory="array")),
-            ("impatient_biased", Impatient(), BiasedFedAvg()),
-        ]
-
-    def availability(kind, seed=0):
-        if kind == "bernoulli":
-            return BernoulliParticipation(probs, seed=42 + seed)
-        if kind == "adversarial":
-            return make_adversarial(n_clients, seed=seed)[0]
-        if kind == "trace":
-            # trace indexed by availability *epoch*; size for the worst case
-            return TraceParticipation(
-                markov_trace(n_clients, 50 * rounds, seed=seed))
-        raise ValueError(kind)
-
-    results: dict = {}
-    for kind in ("bernoulli", "adversarial", "trace"):
-        results[kind] = {}
-        for name, policy, algo in policies():
-            rec = run_policy(name, policy, algo, availability(kind),
-                             problem=problem, rounds=rounds, epoch_s=epoch_s)
-            results[kind][name] = rec
-            tt = rec["seconds_to_target"]
+    n = 96 if fast else 100_000
+    rounds = 40 if fast else 60
+    chunk = 10 if fast else 20
+    seeds = (0, 1, 2)
+    config = SimConfig(epoch_s=EPOCH_S, max_lookahead_epochs=64)
+    batcher = _batcher(n)
+    eval_fn = make_fleet_eval(TinyLogistic(), batcher.eval_batch(1024))
+    sweeps = {}
+    for kind in ("blackout", "cluster"):
+        sweeps[kind] = sweep(kind, n=n, rounds=rounds, seeds=seeds,
+                             chunk=chunk, config=config, batcher=batcher,
+                             eval_fn=eval_fn)
+        for name, rec in sweeps[kind]["by_policy"].items():
+            tt = rec["seconds_to_target_median"]
             emit(f"time_to_accuracy/{kind}/{name}",
-                 rec["host_seconds"] / rounds * 1e6,
-                 f"sim_s={rec['sim_seconds_total']:.0f};"
+                 sweeps[kind]["host_seconds"] / rounds * 1e6,
                  f"to_target={'%.0f' % tt if tt is not None else 'never'};"
-                 f"loss={rec['final_eval_loss']:.4f}")
+                 f"reached={rec['reached']}/{rec['of']}")
 
-    save_artifact("time_to_accuracy", {
-        "n_clients": n_clients, "rounds": rounds, "epoch_s": epoch_s,
-        "target_loss": TARGET_LOSS, "s": s, "results": results})
+    payload = {"target_loss": TARGET_LOSS, "epoch_s": EPOCH_S,
+               "seeds": list(seeds), "section_a": sec_a, "sweeps": sweeps}
+    save_artifact("time_to_accuracy", payload)
+    write_md(payload)
 
-    # headline: under adversarial blackouts the impatient (MIFA) server must
-    # reach the target loss in strictly less simulated wall-clock than the
-    # wait-for-S straggler-bound protocol.
-    adv = results["adversarial"]
-    tt_mifa = adv["impatient_mifa"]["seconds_to_target"]
-    tt_wfs = adv["wait_for_s"]["seconds_to_target"]
-    assert tt_mifa is not None, "MIFA never reached the target loss"
-    assert tt_wfs is None or tt_mifa < tt_wfs, (tt_mifa, tt_wfs)
+    # headline: under both correlated-outage families, closing rounds
+    # without waiting on stragglers (impatient / buffered) must reach the
+    # target eval loss in no more simulated time than blocking on every
+    # device — and never fail to reach it when wait_for_all does.
+    for kind, sw in sweeps.items():
+        bp = sw["by_policy"]
+        tt_imp = bp["impatient"]["seconds_to_target_median"]
+        tt_all = bp["wait_for_all"]["seconds_to_target_median"]
+        assert tt_imp is not None, f"{kind}: impatient never hit target"
+        assert tt_all is None or tt_imp <= tt_all, (kind, tt_imp, tt_all)
+
+
+def write_md(payload: dict) -> None:
+    a = payload["section_a"]
+    lines = [
+        "# Simulated wall-clock time-to-accuracy (compiled runtime simulator)",
+        "",
+        "## Engine speedup: compiled jit(scan) vs discrete-event heap",
+        "",
+        f"Impatient + MIFA(array) at N = {a['n_clients']} clients, "
+        f"T = {a['rounds']} simulated rounds, jit-native Bernoulli "
+        "availability, tiered shifted-exponential latency. Same simulation "
+        "bit-for-bit (f32 close times, losses asserted equal); rounds/sec "
+        "are steady-state medians with compile time reported separately. "
+        "`benchmarks/time_to_accuracy.py` regenerates this file.",
+        "",
+        "| engine | rounds/s | compile (s) | total (s) |",
+        "|---|---|---|---|",
+        f"| event heap (`sim.engine`) | {a['heap_rounds_per_s']:.0f} | "
+        f"{a['heap_compile_s']:.2f} | {a['heap_total_s']:.2f} |",
+        f"| compiled (`sim.compiled`) | {a['scan_rounds_per_s']:.0f} | "
+        f"{a['scan_compile_s']:.2f} | {a['scan_total_s']:.2f} |",
+        "",
+        f"**Steady-state speedup: {a['speedup']:.1f}x** "
+        f"(final train loss {a['final_train_loss']:.6f}, identical on both "
+        "engines).",
+        "",
+        "## Time to target eval loss: seeds × policies, one program per "
+        "scenario",
+        "",
+        f"Median simulated seconds to eval loss {payload['target_loss']} "
+        f"across seeds {payload['seeds']}; each scenario family "
+        "runs every (seed, policy) lane in ONE jit(scan(vmap)) program "
+        "via `repro.fleet.run_sim_fleet`, batches drawn in-program by "
+        "`JitProceduralBatcher`.",
+        "",
+    ]
+    for kind, sw in payload["sweeps"].items():
+        lines += [
+            f"### {kind} (N = {sw['n_clients']:,} devices, "
+            f"{sw['k_lanes']} lanes, {sw['rounds']} rounds, "
+            f"{sw['host_seconds']:.1f}s host)",
+            "",
+            "| policy | sim-seconds to target (median) | reached |",
+            "|---|---|---|",
+        ]
+        for name, rec in sw["by_policy"].items():
+            tt = rec["seconds_to_target_median"]
+            lines.append(
+                f"| {name} | "
+                f"{'%.0f' % tt if tt is not None else '—'} | "
+                f"{rec['reached']}/{rec['of']} |")
+        lines.append("")
+    lines += [
+        "Waiting for every device (`wait_for_all`) pays for stragglers and "
+        "blackouts in simulated seconds; the impatient and buffered-async "
+        "servers close rounds on whoever arrives and convert the same "
+        "gradient work into target accuracy sooner. The buffered K-of-N "
+        "lanes merge stragglers later with staleness-discounted weight "
+        "(`FedBuffAvg`) instead of dropping them.",
+        "",
+    ]
+    path = os.path.join(ARTIFACTS, "time_to_accuracy.md")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(fast="--fast" in sys.argv)

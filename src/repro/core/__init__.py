@@ -1,7 +1,8 @@
 """MIFA core: the paper's contribution (Algorithm 1 + baselines + availability)."""
 from repro.core.mifa import MIFA  # noqa: F401
 from repro.core.baselines import (BiasedFedAvg, FedAvgIS,  # noqa: F401
-                                  FedAvgSampling, SCAFFOLDSampling)
+                                  FedAvgSampling, FedBuffAvg,
+                                  SCAFFOLDSampling)
 from repro.core.participation import (AdversarialParticipation,  # noqa: F401
                                       BernoulliParticipation,
                                       TraceParticipation, TauStats,

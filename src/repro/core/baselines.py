@@ -13,6 +13,9 @@
                          at the same w.
   * SCAFFOLDSampling   — SCAFFOLD control variates on top of the S-device
                          sampling protocol (paper compares against it in §5.1).
+  * FedBuffAvg         — buffered-async aggregation (FedBuff-style): merges
+                         staleness-weighted updates delivered by the
+                         `repro.sim.BufferedKofN` server policy.
 
 All share MIFA's round API: init_state / round_step(state, params, updates,
 losses, active, eta, rng).
@@ -20,6 +23,7 @@ losses, active, eta, rng).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +46,42 @@ class BiasedFedAvg:
         loss = jnp.sum(losses * act) / denom
         return ({"t": state["t"] + 1}, new_params,
                 {"loss": loss, "n_active": jnp.sum(act)})
+
+
+@dataclass(frozen=True)
+class FedBuffAvg:
+    """Buffered-async FedAvg (FedBuff-style): the server-side aggregator
+    behind `repro.sim.BufferedKofN`.
+
+    `active` arrives as a float32 weight vector (staleness discounts
+    1/sqrt(1+s) from the buffered policy, 0 for non-contributors) instead
+    of a bool mask — `weight_aware` tells the simulation engines to pass
+    weights through. The update is Σ w_i·u_i / |contributors|: dividing by
+    the contributor COUNT (not Σw) keeps the step size comparable to
+    synchronous FedAvg while stale updates are attenuated, matching the
+    FedBuff recipe. With a bool mask it degenerates to `BiasedFedAvg`.
+    """
+
+    weight_aware: ClassVar[bool] = True
+
+    def init_state(self, params, n_clients: int) -> dict:
+        """Stateless aggregation: only the round counter `t`."""
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def round_step(self, state, params, updates, losses, active, eta,
+                   rng=None):
+        """One buffered merge: weighted mean over contributors (active > 0),
+        server step w <- w - η·mean; loss averages the contributors."""
+        w = active.astype(jnp.float32)
+        contrib = (w > 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(contrib), 1.0)
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(w, u), 0) / denom, updates)
+        new_params = jax.tree.map(lambda p, g: (p - eta * g).astype(p.dtype),
+                                  params, mean_G)
+        loss = jnp.sum(losses * contrib) / denom
+        return ({"t": state["t"] + 1}, new_params,
+                {"loss": loss, "n_active": jnp.sum(contrib)})
 
 
 @dataclass(frozen=True)

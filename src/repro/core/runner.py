@@ -464,7 +464,7 @@ class RoundRunner:
 
 
 def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
-           participation=None, scenario=None,
+           participation=None, scenario=None, sim=None,
            eta_local: Callable | float | None = None,
            weight_decay: float = 0.0, seed: int = 0,
            eval_fn: Callable | None = None, eval_every: int = 10,
@@ -480,6 +480,17 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
       * scenario — a `repro.scenarios` Scenario/process; dense algorithms
         sample the mask INSIDE the jitted round (jit-native surface),
         cohort algorithms use the scenario's host surface (same masks).
+
+    `sim` switches the run onto the simulated wall clock: pass a
+    `repro.sim.compiled.SimSpec` (server policy + latency model + temporal
+    config) and rounds open/close in simulated seconds under that policy —
+    the applied-update mask becomes the policy's arrival decision instead
+    of the raw availability draw. Under ``engine="scan"`` the compiled
+    simulator (`repro.sim.compiled.SimScanDriver`) runs the whole event
+    flow in-program when `sim_scan_supported` says yes; otherwise (and
+    always under ``engine="loop"``) the discrete-event heap engine
+    (`repro.sim.engine.FedSimEngine`) drives it, with a warning naming the
+    blocker under ``engine="scan"`` and a raise under ``"scan_strict"``.
 
     `model` supplies init/loss/accuracy; batcher.sample_round(t) -> batch
     pytree with leaves (N, K, mb, ...); schedule(t) -> server learning rate
@@ -514,6 +525,30 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
                          weight_decay=weight_decay, seed=seed, params=params,
                          uses_update_clock=uses_update_clock,
                          cohort_capacity=cohort_capacity, scenario=scenario)
+    if sim is not None:
+        from repro.sim.compiled import run_sim_scan, sim_scan_supported
+        from repro.sim.engine import FedSimEngine
+        if engine != "loop":
+            ok, why = sim_scan_supported(runner, sim)
+            if ok:
+                return run_sim_scan(runner, sim, n_rounds,
+                                    scan_chunk=scan_chunk, eval_fn=eval_fn,
+                                    eval_every=eval_every, verbose=verbose)
+            if engine == "scan_strict":
+                raise ValueError(f"engine='scan_strict': {why}")
+            import warnings
+            warnings.warn(f"engine='scan' unsupported for this simulated "
+                          f"configuration ({why}); falling back to the "
+                          "discrete-event heap engine", stacklevel=2)
+        part = participation if participation is not None \
+            else runner.scen_process.host_sampler()
+        eng = FedSimEngine(runner, sim.policy, part, sim.latency, sim.config,
+                           seed=seed)
+        t0 = time.time()
+        params, hist = eng.run(n_rounds, eval_fn=eval_fn,
+                               eval_every=eval_every)
+        hist.wall_time = time.time() - t0
+        return params, hist
     if engine != "loop":
         from repro.core.scan_engine import ScanDriver, scan_supported
         ok, why = scan_supported(runner)

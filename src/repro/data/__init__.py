@@ -1,4 +1,5 @@
 from repro.data.synthetic import make_classification  # noqa: F401
 from repro.data.partition import label_skew_partition  # noqa: F401
-from repro.data.pipeline import (ClientBatcher, ProceduralBatcher,  # noqa: F401
+from repro.data.pipeline import (ClientBatcher,  # noqa: F401
+                                 JitProceduralBatcher, ProceduralBatcher,
                                  TokenBatcher)

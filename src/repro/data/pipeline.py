@@ -123,3 +123,90 @@ class ProceduralBatcher:
             xs[j] = x
             ys[j] = np.argmax(x @ self.teacher, axis=-1).astype(np.int32)
         return {"x": xs, "y": ys}
+
+
+class JitProceduralBatcher:
+    """Procedural batches with a jit-native drawing surface (two surfaces,
+    like `repro.scenarios` / `repro.sim.latency`).
+
+    `ProceduralBatcher` regenerates client shards on demand but assembles
+    each round with a Python loop over clients — O(N) host work per round,
+    which dominates at N=10⁵⁺. This batcher draws the SAME kind of data
+    (client-specific mean shifts + noise, labels from a fixed random linear
+    teacher — different RNG streams, so draws are not bitwise equal to
+    `ProceduralBatcher`'s) from `jax.random` counter streams instead:
+
+      * `batch_fn()` returns a pure ``(t) -> {'x', 'y'}`` function drawing
+        the whole round IN-program (keyed by fold_in, so round t's batch
+        depends only on (seed, t)) — the compiled simulator's scan body
+        calls it so no (L, N, ...) batch stack ever crosses the host.
+      * `sample_round(t)` materialises the jitted surface to NumPy —
+        bit-identical to the in-program draw, so loop/heap drivers see the
+        same data as compiled ones.
+
+    `eval_batch(n)` draws a held-out set (its own stream, shared by every
+    round) for time-to-accuracy eval functions.
+    """
+
+    def __init__(self, *, n_clients: int, dim: int, n_classes: int = 2,
+                 batch_size: int, k_steps: int, shift: float = 1.0,
+                 noise: float = 1.0, seed: int = 0):
+        import jax
+        self.n_clients = n_clients
+        self.dim = dim
+        self.n_classes = n_classes
+        self.batch_size = batch_size
+        self.k_steps = k_steps
+        self.shift = shift
+        self.noise = noise
+        self.seed = seed
+        kt, km, kd, ke = jax.random.split(jax.random.PRNGKey(seed), 4)
+        self._k_teacher, self._k_means = kt, km
+        self._k_data, self._k_eval = kd, ke
+        self._host_fn = None
+
+    def batch_fn(self):
+        """Pure ``(t) -> {'x': (N, K, mb, dim) f32, 'y': (N, K, mb) i32}``,
+        jit/vmap/scan-safe; all draws keyed by fold_in(seed-derived keys, t)."""
+        import jax
+        import jax.numpy as jnp
+        n, k, mb, d = (self.n_clients, self.k_steps, self.batch_size,
+                       self.dim)
+        teacher = jax.random.normal(self._k_teacher, (d, self.n_classes),
+                                    jnp.float32)
+        means = self.shift * jax.random.normal(self._k_means, (n, d),
+                                               jnp.float32)
+        noise, k_data = jnp.float32(self.noise), self._k_data
+
+        def draw(t):
+            z = jax.random.normal(jax.random.fold_in(k_data, t),
+                                  (n, k, mb, d), jnp.float32)
+            x = noise * z + means[:, None, None, :]
+            y = jnp.argmax(x @ teacher, axis=-1).astype(jnp.int32)
+            return {"x": x, "y": y}
+
+        return draw
+
+    def sample_round(self, t: int, client_ids=None) -> dict:
+        """Round t's batch as NumPy (the jit surface materialised — identical
+        to in-program draws); `client_ids` selects a compact cohort view."""
+        import jax
+        if self._host_fn is None:
+            self._host_fn = jax.jit(self.batch_fn())
+        batch = {k: np.asarray(v) for k, v in self._host_fn(t).items()}
+        if client_ids is not None:
+            ids = np.asarray(client_ids, np.int64)
+            batch = {k: v[ids] for k, v in batch.items()}
+        return batch
+
+    def eval_batch(self, n_eval: int = 2048) -> dict:
+        """Held-out {'x': (n_eval, dim), 'y': (n_eval,)} from the eval
+        stream: global mean (no client shift) + noise, teacher labels."""
+        import jax
+        import jax.numpy as jnp
+        teacher = np.asarray(jax.random.normal(
+            self._k_teacher, (self.dim, self.n_classes), jnp.float32))
+        x = self.noise * np.asarray(jax.random.normal(
+            self._k_eval, (n_eval, self.dim), jnp.float32))
+        y = np.argmax(x @ teacher, axis=-1).astype(np.int32)
+        return {"x": x, "y": y}

@@ -3,3 +3,4 @@ from repro.fleet.executor import (FleetHistory, FleetRunner,  # noqa: F401
                                   FleetScanDriver, fleet_scan_supported,
                                   make_fleet_eval, run_fleet)
 from repro.fleet.spec import FleetSpec, Trial, expand_grid  # noqa: F401
+from repro.fleet.sim import SimTrial, run_sim_fleet  # noqa: F401

@@ -68,21 +68,32 @@ class FleetHistory:
     global_updates: list = field(default_factory=list)
     eval_loss: list = field(default_factory=list)      # (t, (K,)) per eval
     eval_acc: list = field(default_factory=list)
+    sim_seconds: list = field(default_factory=list)    # (K,) close per round
+    eval_seconds: list = field(default_factory=list)   # (t, (K,)) per eval
     wall_time: float = 0.0
 
-    def record_round(self, t: int, metrics: dict) -> None:
-        """Append round t's (K,) metric vectors (loss, n_active, ...)."""
+    def record_round(self, t: int, metrics: dict, sim_time=None) -> None:
+        """Append round t's (K,) metric vectors (loss, n_active, ...);
+        `sim_time` stamps the round with per-trial simulated seconds
+        (simulated-fleet runs, `repro.fleet.sim`)."""
         self.rounds.append(t)
         self.train_loss.append(np.asarray(metrics["loss"], np.float64))
         self.n_active.append(np.asarray(metrics["n_active"], np.float64))
         if "global_updates" in metrics:
             self.global_updates.append(
                 np.asarray(metrics["global_updates"], np.float64))
+        if sim_time is not None:
+            self.sim_seconds.append(np.asarray(sim_time, np.float64))
 
-    def record_eval(self, t: int, eval_loss, eval_acc) -> None:
-        """Append an eval point: (round, (K,) losses) and (round, (K,) accs)."""
+    def record_eval(self, t: int, eval_loss, eval_acc,
+                    sim_time=None) -> None:
+        """Append an eval point: (round, (K,) losses) and (round, (K,) accs);
+        `sim_time` additionally stamps it on the per-trial simulated-seconds
+        axis (eval_seconds)."""
         self.eval_loss.append((t, np.asarray(eval_loss, np.float64)))
         self.eval_acc.append((t, np.asarray(eval_acc, np.float64)))
+        if sim_time is not None:
+            self.eval_seconds.append((t, np.asarray(sim_time, np.float64)))
 
     def stacked(self) -> dict:
         """{'train_loss': (K, T), 'n_active': (K, T), ...} arrays."""
@@ -97,6 +108,11 @@ class FleetHistory:
             out["eval_rounds"] = np.asarray([t for t, _ in self.eval_loss])
             out["eval_loss"] = np.stack([v for _, v in self.eval_loss], 1)
             out["eval_acc"] = np.stack([v for _, v in self.eval_acc], 1)
+        if self.sim_seconds:
+            out["sim_seconds"] = np.stack(self.sim_seconds, axis=1)
+        if self.eval_seconds:
+            out["eval_seconds"] = np.stack(
+                [v for _, v in self.eval_seconds], 1)
         return out
 
     def trial(self, k: int) -> FLHistory:
@@ -108,6 +124,8 @@ class FleetHistory:
         h.global_updates = [float(v[k]) for v in self.global_updates]
         h.eval_loss = [(t, float(v[k])) for t, v in self.eval_loss]
         h.eval_acc = [(t, float(v[k])) for t, v in self.eval_acc]
+        h.sim_seconds = [float(v[k]) for v in self.sim_seconds]
+        h.eval_seconds = [(t, float(v[k])) for t, v in self.eval_seconds]
         h.wall_time = self.wall_time
         return h
 

@@ -1,0 +1,197 @@
+"""Simulated-fleet executor: K wall-clock trials as one scan(vmap) program.
+
+Time-to-accuracy studies are statistical claims over seeds × server
+policies, and under the compiled simulator (`repro.sim.compiled`) every
+piece of per-round state — the clock, the availability epoch window, the
+latency and scenario streams, the unified policy parameters, the in-flight
+buffer — is a carry pytree. This module stacks K such carries along a
+leading trial axis and runs the whole sweep as
+``jit(scan(vmap(sim_body)))``: one program advances K policies × seeds by
+a chunk of simulated rounds, at N=10⁵⁺ devices.
+
+Because the policy algebra is *parametric* (`sim.policies.policy_params`),
+trials may mix DIFFERENT policies (WaitForAll next to BufferedKofN) in one
+program — the per-lane parameter pytree selects each lane's behaviour.
+Scenario processes and latency models must each share a class across
+trials (one pure sample function per program), but their parameters are
+per-lane state and may differ freely. Per lane the trajectory is the one
+`SimScanDriver` (and therefore the heap engine) produces for that
+(seed, policy, scenario, latency) — parity-tested in
+tests/test_sim_compiled.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scan_engine import (_eval_rounds, _stack, chunk_bounds,
+                                    run_pipelined_chunks)
+from repro.fleet.executor import FleetHistory
+from repro.sim.compiled import make_sim_scan_body
+from repro.sim.engine import SimConfig
+from repro.sim.policies import init_policy_state, policy_params
+
+
+@dataclass(frozen=True)
+class SimTrial:
+    """One lane of a simulated fleet: the trial's model-init/round `seed`,
+    its server `policy`, its availability `scenario` (process or Scenario),
+    and its `latency` model; `label` names it in the history."""
+
+    seed: int
+    policy: object
+    scenario: object
+    latency: object
+    label: str | None = None
+
+
+def _check_homogeneous(objs: Sequence, what: str) -> None:
+    """All trials must share one class for `what` (one pure fn per program)."""
+    kinds = {type(o).__name__ for o in objs}
+    if len(kinds) > 1:
+        raise ValueError(
+            f"all trials in one simulated fleet must share a {what} class "
+            f"(one pure sample function per vmapped program); got "
+            f"{sorted(kinds)} — split the sweep")
+
+
+def run_sim_fleet(*, model, algo, batcher, schedule: Callable, n_rounds: int,
+                  trials: Sequence[SimTrial],
+                  config: SimConfig = SimConfig(),
+                  eta_local: Callable | float | None = None,
+                  weight_decay: float = 0.0, scan_chunk: int = 64,
+                  eval_fn: Callable | None = None, eval_every: int = 10,
+                  batch_fn: Callable | None = None,
+                  verbose: bool = False) -> tuple[Any, FleetHistory]:
+    """Run K simulated wall-clock trials as one scan(vmap) program.
+
+    Args:
+      model, algo, batcher, schedule: shared problem, exactly as
+        `core.runner.run_fl` takes them (`eta_local` overrides the client
+        rate, `weight_decay` applies to the local steps); the algorithm
+        must be dense (cohort algorithms assemble batches on the host).
+      n_rounds: simulated server rounds per trial.
+      trials: `SimTrial` lanes — seed × policy × scenario × latency.
+        Policies may differ per lane (the unified algebra is parametric);
+        scenario processes and latency models must share a class.
+      config: shared `SimConfig` (epoch length, server overhead, lookahead
+        window — static shapes, so it is per-sweep, not per-lane).
+      scan_chunk: rounds per compiled chunk (boundaries snap to evals).
+      eval_fn: consumes stacked (K, ...) params -> ((K,) losses, (K,)
+        accs) — `fleet.make_fleet_eval`. Runs every `eval_every` rounds,
+        stamped per lane at that round's close + server overhead.
+      batch_fn: optional pure ``(t) -> batch`` drawing the round batch
+        IN-program (`data.pipeline.JitProceduralBatcher.batch_fn`) — at
+        N=10⁵⁺ this keeps the host from assembling (L, N, ...) batch
+        stacks; without it batches are host-fed per chunk like every other
+        scan driver.
+      verbose: print per-eval progress lines.
+
+    Returns:
+      (stacked (K, ...) params, `FleetHistory`) with per-lane
+      sim_seconds/eval_seconds populated — `hist.trial(k)` gives lane k's
+      plain `FLHistory` for time-to-accuracy curves.
+    """
+    from repro.scenarios.base import as_process
+    k_trials = len(trials)
+    assert k_trials > 0, "need at least one SimTrial"
+    if getattr(algo, "cohort_based", False):
+        raise NotImplementedError(
+            "cohort-based algorithms assemble compact batches on the host; "
+            "the simulated fleet needs a dense algorithm")
+    n = batcher.n_clients
+    procs = [as_process(tr.scenario) for tr in trials]
+    lats = [tr.latency for tr in trials]
+    _check_homogeneous(procs, "scenario process")
+    _check_homogeneous(lats, "latency model")
+    for p in procs:
+        assert p.n == n, (p.n, n)
+    for lt in lats:
+        assert lt.n == n, (lt.n, n)
+
+    body = make_sim_scan_body(model, algo, batcher.k_steps, weight_decay,
+                              procs[0].sample_fn(), lats[0].sample_fn(),
+                              config, batch_fn=batch_fn)
+    xs_axes = {"t": None, "eta_loc": None, "eta_srv": None}
+    if batch_fn is None:
+        xs_axes["batch"] = None
+    vbody = jax.vmap(body, in_axes=(0, xs_axes))
+    chunk_fn = jax.jit(lambda carry, xs: jax.lax.scan(vbody, carry, xs),
+                       donate_argnums=(0,))
+
+    stack = lambda leaves: jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+    rngs = jnp.stack([jax.random.PRNGKey(int(tr.seed)) for tr in trials])
+    params = jax.vmap(model.init)(rngs)
+    w = config.max_lookahead_epochs
+    carry = {
+        "state": jax.vmap(lambda p: algo.init_state(p, n))(params),
+        "params": params, "rng": rngs,
+        "now": jnp.zeros(k_trials, jnp.float32),
+        "e_next": jnp.zeros(k_trials, jnp.int32),
+        "win": jnp.zeros((k_trials, w + 1, n), bool),
+        "scen_state": stack([p.init_state() for p in procs]),
+        "scen_key": jnp.stack([p.key for p in procs]),
+        "lat_state": stack([lt.init_state() for lt in lats]),
+        "lat_key": jnp.stack([lt.key for lt in lats]),
+        "pp": stack([policy_params(tr.policy, n) for tr in trials]),
+        "pstate": stack([init_policy_state(n) for _ in trials]),
+        "tau": jnp.zeros((k_trials, n), jnp.int32),
+        "tau_max": jnp.zeros((k_trials, n), jnp.int32),
+    }
+
+    hist = FleetHistory(k_trials, labels=[
+        tr.label or f"seed{tr.seed}:{getattr(tr.policy, 'name', 'policy')}"
+        for tr in trials])
+    evals = _eval_rounds(n_rounds, eval_every, eval_fn is not None)
+    overhead = np.float32(config.server_overhead_s)
+    last_close = {"v": None}       # (K,) close times of the latest round
+
+    def build_xs(t0, t1):
+        xs = {"t": np.arange(t0, t1, dtype=np.int32),
+              "eta_loc": np.asarray([
+                  float(schedule(t + 1)) if eta_local is None
+                  else (float(eta_local(t + 1)) if callable(eta_local)
+                        else float(eta_local))
+                  for t in range(t0, t1)], np.float32),
+              "eta_srv": np.asarray([float(schedule(t + 1))
+                                     for t in range(t0, t1)], np.float32)}
+        if batch_fn is None:
+            xs["batch"] = _stack([batcher.sample_round(t)
+                                  for t in range(t0, t1)])
+        return xs
+
+    def writeback(c):
+        carry_ref["c"] = c
+
+    carry_ref = {"c": carry}
+
+    def flush(t0, t1, ys, _carry):
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+        for j, t in enumerate(range(t0, t1)):
+            hist.record_round(
+                t, {"loss": ys["loss"][j], "n_active": ys["n_active"][j]},
+                sim_time=ys["t_close"][j])
+        last_close["v"] = ys["t_close"][-1]
+
+    def on_sync(t):
+        sim_t = (last_close["v"].astype(np.float32) + overhead) \
+            .astype(np.float64)
+        el, ea = eval_fn(carry_ref["c"]["params"])
+        hist.record_eval(t, el, ea, sim_time=sim_t)
+        if verbose:
+            print(f"  round {t:5d} sim_t={sim_t.mean():10.2f}s "
+                  f"loss={np.asarray(el).mean():.4f} "
+                  f"acc={np.asarray(ea).mean():.4f}")
+
+    t0 = time.time()
+    final = run_pipelined_chunks(
+        carry, chunk_bounds(n_rounds, scan_chunk, evals),
+        chunk_fn=chunk_fn, build_xs=build_xs, writeback=writeback,
+        flush=flush, sync_rounds=evals, on_sync=on_sync)
+    hist.wall_time = time.time() - t0
+    return final["params"], hist

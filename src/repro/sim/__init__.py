@@ -3,16 +3,28 @@
 Layers:
   * events   — heap-based event queue (arrival / round-close records).
   * latency  — per-client round-trip-time models (shifted-exponential,
-               lognormal compute+comm, trace replay).
+               lognormal compute+comm, trace replay), each exposing a pure
+               jit-native ``sample_fn`` plus a host ``sample`` surface.
   * policies — server round policies: WaitForAll, WaitForS (paper Eq. 3),
-               Deadline (over-select, drop late), Impatient (MIFA).
+               Deadline (over-select, drop late), Impatient (MIFA),
+               BufferedKofN (FedBuff-style buffered async). All lower to one
+               parametric algebra (`policy_params` / `unified_resolve`) so
+               mixed-policy fleets compile as one program.
   * engine   — FedSimEngine: drives RoundRunner rounds on a simulated clock,
                reusing the availability processes in core.participation.
+               Reference semantics for the compiled path.
+  * compiled — SimScanDriver: the same simulation as a jit(scan) program —
+               clock, epoch window, policy state all ride the scan carry;
+               bit-exact against FedSimEngine (tests/test_sim_compiled.py).
 """
 from repro.sim.events import Event, EventQueue  # noqa: F401
-from repro.sim.latency import (LognormalLatency,  # noqa: F401
+from repro.sim.latency import (LatencyModel, LognormalLatency,  # noqa: F401
                                ShiftedExponentialLatency, TraceLatency,
                                tiered_shifted_exponential)
-from repro.sim.policies import (Deadline, Impatient,  # noqa: F401
-                                WaitForAll, WaitForS)
+from repro.sim.policies import (BufferedKofN, Deadline,  # noqa: F401
+                                Impatient, WaitForAll, WaitForS,
+                                init_policy_state, policy_params,
+                                unified_resolve, unified_select)
 from repro.sim.engine import FedSimEngine, SimConfig  # noqa: F401
+from repro.sim.compiled import (SimScanDriver, SimSpec,  # noqa: F401
+                                run_sim_scan, sim_scan_supported)

@@ -1,0 +1,339 @@
+"""Compiled runtime simulator: the heap engine's semantics as a scan body.
+
+`repro.sim.engine.FedSimEngine` is a host heap loop — per round it runs
+Python epoch scans per device, pushes/pops heap events, and dispatches one
+jitted round. That caps wall-clock studies at small N. This module lifts
+the WHOLE per-round event flow into a pure `lax.scan` body so T simulated
+rounds compile into chunked XLA programs (and K-trial policy sweeps vmap
+the same body — `repro.fleet.sim`):
+
+  1. availability  — the scenario's jit-native sampler fills a rolling
+     (W+1, N) epoch window in the carry (W = SimConfig.max_lookahead_epochs);
+     each epoch is drawn exactly once, in order, so the draws are
+     bit-identical to the heap engine's lazy epoch cache. Next-active-epoch
+     resolution is one argmax over the window — no (T, N) trace, no
+     per-device Python scan.
+  2. latency       — `sim.latency` models' pure ``(key, t, state) -> rtt``
+     surface draws the whole round's RTTs in-program.
+  3. policy        — `sim.policies.unified_select` / `unified_resolve`:
+     one parametric close/apply algebra covering WaitForAll / WaitForS /
+     Deadline / Impatient / BufferedKofN, its state (the in-flight buffer)
+     riding the carry.
+  4. round         — `core.runner.make_dense_round_fn`, the same pure round
+     function every other driver uses; weight-aware algorithms (FedBuffAvg)
+     receive the policy's staleness weights as the active mask.
+
+Simulated time is float32 with the same op ordering as the heap engine, so
+close times, applied masks, and losses are bit-equal between the two
+drivers on every supported config — the heap stays the reference
+semantics; `sim_scan_supported` names the blocker (cohort algorithms,
+update-clock schedules, host-only latency/policy surfaces, oversized epoch
+windows) when a config must fall back.
+
+Carry layout (`SimScanDriver._init_carry`): the scan-engine carry
+``{"state", "params", "rng"}`` plus the simulator extension ``{"now",
+"e_next", "win", "scen_state", "scen_key", "lat_state", "lat_key", "pp",
+"pstate", "tau", "tau_max"}`` — clock, epoch window, scenario / latency /
+policy streams and parameters, and τ accumulators. Everything numeric
+rides the carry, never the closure, so `jax.vmap` over a leading trial
+axis sweeps seeds × policies × latency params as one program.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runner import RoundRunner, make_dense_round_fn
+from repro.core.scan_engine import (_eval_rounds, _stack, chunk_bounds,
+                                    run_pipelined_chunks)
+from repro.sim.engine import SimConfig
+from repro.sim.policies import (init_policy_state, policy_params,
+                                unified_resolve, unified_select)
+
+# epoch windows larger than this many bools would dominate device memory
+# (the window is per fleet lane); sized so W=512 still fits N=10^5
+MAX_WINDOW_ELEMS = 1 << 26
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """Simulation request for `run_fl(sim=...)`: the server `policy`, the
+    `latency` model, and the temporal `config` (epoch length, server
+    overhead, lookahead horizon). The compiled engine serves it when
+    `sim_scan_supported` says yes; otherwise the heap engine does."""
+
+    policy: object
+    latency: object
+    config: SimConfig = field(default_factory=SimConfig)
+
+
+def sim_scan_supported(runner: RoundRunner, sim: SimSpec) -> tuple[bool, str]:
+    """Can this (runner, sim) pair run as a compiled scan? (ok, reason).
+
+    The blockers mirror `core.scan_engine.scan_supported` and add the
+    simulator's own: availability must come from a scenario (jit-native
+    sampler), the latency model and policy must expose their jit surfaces
+    (`sample_fn` / `unified`), and the (W+1, N) epoch window must fit.
+    """
+    if runner.scen_process is None:
+        return False, ("the compiled simulator samples availability inside "
+                       "the program; pass scenario= (host participation "
+                       "processes have no jit-native surface)")
+    if runner.cohort_mode:
+        return False, ("cohort-based algorithms assemble compact batches on "
+                       "the host per round; the simulated clock cannot ride "
+                       "their scan carry")
+    if runner.uses_update_clock:
+        return False, ("update-clock schedules read the device-side "
+                       "applied-update counter between rounds; the host "
+                       "cannot precompute a chunk of learning rates")
+    if not hasattr(sim.latency, "sample_fn"):
+        return False, (f"{type(sim.latency).__name__} has no jit-native "
+                       "sample_fn surface; only host sampling is possible")
+    if not hasattr(sim.policy, "unified"):
+        return False, (f"{type(sim.policy).__name__} has no unified() "
+                       "parametric form; only the heap engine can drive it")
+    w = sim.config.max_lookahead_epochs
+    if (w + 1) * runner.n_clients > MAX_WINDOW_ELEMS:
+        return False, (
+            f"the ({w + 1}, {runner.n_clients}) availability epoch window "
+            f"exceeds {MAX_WINDOW_ELEMS} elements; lower "
+            "SimConfig.max_lookahead_epochs for compiled runs")
+    return True, ""
+
+
+def make_sim_scan_body(model, algo, k_steps: int, weight_decay: float,
+                       scen_fn: Callable, lat_fn: Callable, config: SimConfig,
+                       *, emit_masks: bool = False,
+                       batch_fn: Callable | None = None) -> Callable:
+    """Build the simulator's `lax.scan` body: one simulated round per step.
+
+    ``(carry, xs) -> (carry, ys)`` where xs carries ``{"t", "eta_loc",
+    "eta_srv"}`` plus ``"batch"`` unless `batch_fn(t)` draws batches
+    in-program (`data.pipeline.JitProceduralBatcher.batch_fn`). The body:
+    fill the epoch window up to k0+W, resolve each device's dispatch start
+    (now if available, else its next active epoch start, else inf), draw
+    RTTs, select the cohort, close the round via the unified policy
+    algebra, and apply the round function with the applied mask (or the
+    staleness weights, for weight-aware algorithms). ys are the round
+    metrics plus ``t_open / t_close / n_dispatched / n_applied / n_late /
+    n_never / tau_sum / tau_sq_sum`` (and the ``cohort`` / ``applied`` /
+    ``weights`` vectors under `emit_masks`, for parity tests).
+
+    `scen_fn` / `lat_fn` are the jit-native scenario and latency surfaces;
+    every numeric parameter rides the carry so the fleet can vmap the body.
+    """
+    base = make_dense_round_fn(model, algo, k_steps, weight_decay)
+    weight_aware = getattr(algo, "weight_aware", False)
+    w = config.max_lookahead_epochs
+    epoch_s = jnp.float32(config.epoch_s)
+    overhead_s = jnp.float32(config.server_overhead_s)
+    inf = jnp.float32(jnp.inf)
+
+    def body(carry, x):
+        t = x["t"]
+        now = carry["now"]
+        k0 = jnp.floor(now / epoch_s).astype(jnp.int32)
+
+        # 1. epoch window: draw epochs e_next..k0+W consecutively (each
+        # exactly once, in order — the heap engine's lazy cache draws the
+        # same sequence, so the masks are bit-identical)
+        def fill_cond(c):
+            return c[1] <= k0 + w
+
+        def fill_step(c):
+            win, e, scen_state = c
+            mask, scen_state = scen_fn(carry["scen_key"], e, scen_state)
+            return win.at[e % (w + 1)].set(mask), e + 1, scen_state
+        win, e_next, scen_state = jax.lax.while_loop(
+            fill_cond, fill_step,
+            (carry["win"], carry["e_next"], carry["scen_state"]))
+
+        # 2. dispatch starts: now if available now, else the start of the
+        # device's first active epoch in (k0, k0+W], else inf (never)
+        avail_now = win[k0 % (w + 1)]
+        future = win[(k0 + 1 + jnp.arange(w)) % (w + 1)]       # (W, N)
+        returns = future.any(axis=0)
+        next_epoch = k0 + 1 + jnp.argmax(future, axis=0).astype(jnp.int32)
+        starts = jnp.where(avail_now, now,
+                           jnp.where(returns,
+                                     next_epoch.astype(jnp.float32) * epoch_s,
+                                     inf))
+
+        # 3. latency + cohort + arrivals
+        rtt = lat_fn(carry["lat_key"], t, carry["lat_state"])
+        cohort = unified_select(t, carry["pp"], carry["pstate"])
+        arrivals = jnp.where(cohort, starts + rtt, inf)
+
+        # 4. close the round (unified policy algebra; pstate = the
+        # buffered policies' in-flight buffer)
+        close, applied, weights, pstate, info = unified_resolve(
+            carry["pp"], carry["pstate"], cohort, avail_now, arrivals,
+            now, epoch_s, t)
+
+        # 5. the same pure round function every other driver applies
+        active = weights if weight_aware else applied
+        rng, sub = jax.random.split(carry["rng"])
+        batch = batch_fn(t) if batch_fn is not None else x["batch"]
+        state, params, metrics = base(carry["state"], carry["params"], batch,
+                                      active, x["eta_loc"], x["eta_srv"],
+                                      sub)
+
+        tau = jnp.where(applied, 0, carry["tau"] + 1)
+        out = {"state": state, "params": params, "rng": rng,
+               "now": close + overhead_s, "e_next": e_next, "win": win,
+               "scen_state": scen_state, "scen_key": carry["scen_key"],
+               "lat_state": carry["lat_state"], "lat_key": carry["lat_key"],
+               "pp": carry["pp"], "pstate": pstate,
+               "tau": tau, "tau_max": jnp.maximum(carry["tau_max"], tau)}
+        ys = dict(metrics, t_open=now, t_close=close,
+                  n_dispatched=jnp.sum(cohort).astype(jnp.int32),
+                  n_applied=jnp.sum(applied).astype(jnp.int32),
+                  n_late=info["n_late"], n_never=info["n_never"],
+                  tau_sum=jnp.sum(tau), tau_sq_sum=jnp.sum(tau * tau))
+        if emit_masks:
+            ys.update(cohort=cohort, applied=applied, weights=weights)
+        return out, ys
+
+    return body
+
+
+def init_sim_carry(runner: RoundRunner, sim: SimSpec) -> dict:
+    """The simulator's scan carry from a freshly constructed runner:
+    state/params/rng plus clock (now=0), empty epoch window, scenario and
+    latency streams/params, unified policy params/state, and τ counters.
+    Params are copied (the chunk call donates the carry)."""
+    r = runner
+    proc = r.scen_process
+    n = r.n_clients
+    w = sim.config.max_lookahead_epochs
+    return {"state": r.state, "params": jax.tree.map(jnp.array, r.params),
+            "rng": r.rng,
+            "now": jnp.float32(0.0), "e_next": jnp.int32(0),
+            "win": jnp.zeros((w + 1, n), bool),
+            "scen_state": proc.init_state(), "scen_key": proc.key,
+            "lat_state": sim.latency.init_state(),
+            "lat_key": sim.latency.key,
+            "pp": policy_params(sim.policy, n),
+            "pstate": init_policy_state(n),
+            "tau": jnp.asarray(r.stats.tau, jnp.int32),
+            "tau_max": jnp.asarray(r.stats.tau_max_per_dev, jnp.int32)}
+
+
+class SimScanDriver:
+    """Drives a `RoundRunner` through T *simulated* rounds as chunked scan
+    programs — the compiled twin of `sim.engine.FedSimEngine`.
+
+    Constructed by `run_fl(sim=..., engine="scan")` after
+    `sim_scan_supported` says yes. Mirrors `core.scan_engine.ScanDriver`:
+    chunks snap to eval rounds, the carry is donated across chunks, history
+    and τ statistics are written back so `runner.finalize()` works
+    unchanged — with every round stamped in simulated seconds, and evals
+    stamped at close + server overhead exactly like the heap engine.
+    `round_log` collects the heap engine's per-round records (open/close
+    times, dispatch/applied/late/never counts) for time-to-accuracy plots.
+    """
+
+    def __init__(self, runner: RoundRunner, sim: SimSpec, *,
+                 scan_chunk: int = 64, emit_masks: bool = False):
+        if scan_chunk < 1:
+            raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
+        self.r = runner
+        self.sim = sim
+        self.scan_chunk = scan_chunk
+        self.emit_masks = emit_masks
+        self.round_log: list[dict] = []
+        self.applied_log: list[np.ndarray] = []
+        self.cohort_log: list[np.ndarray] = []
+        body = make_sim_scan_body(
+            runner.model, runner.algo, runner.batcher.k_steps,
+            runner.weight_decay, runner.scen_process.sample_fn(),
+            sim.latency.sample_fn(), sim.config, emit_masks=emit_masks)
+        self._chunk_fn = jax.jit(
+            lambda carry, xs: jax.lax.scan(body, carry, xs),
+            donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    def _build_xs(self, t0: int, t1: int) -> dict:
+        r = self.r
+        pairs = [r.learning_rates(t) for t in range(t0, t1)]
+        return {"t": np.arange(t0, t1, dtype=np.int32),
+                "eta_loc": np.asarray([p[0] for p in pairs], np.float32),
+                "eta_srv": np.asarray([p[1] for p in pairs], np.float32),
+                "batch": _stack([r.batcher.sample_round(t)
+                                 for t in range(t0, t1)])}
+
+    def _writeback(self, carry: dict) -> None:
+        r = self.r
+        r.state, r.params, r.rng = (carry["state"], carry["params"],
+                                    carry["rng"])
+        r.scen_state = carry["scen_state"]
+
+    def _flush(self, t0: int, t1: int, ys: dict, carry: dict) -> None:
+        """Block on a chunk's results; rebuild per-round history, the
+        simulated-seconds axis, τ statistics, and the round log."""
+        self.r.stats.absorb_scan(carry["tau"], carry["tau_max"],
+                                 ys["tau_sum"], ys["tau_sq_sum"])
+        ys = {k: np.asarray(v) for k, v in ys.items()}
+        skip = ("tau_sum", "tau_sq_sum", "t_open", "t_close", "n_dispatched",
+                "n_applied", "n_late", "n_never", "cohort", "applied",
+                "weights")
+        for j, t in enumerate(range(t0, t1)):
+            self.r.hist.record_round(
+                t, {k: v[j] for k, v in ys.items() if k not in skip},
+                sim_time=ys["t_close"][j])
+            self.round_log.append(
+                {"round": t, "t_open": float(ys["t_open"][j]),
+                 "t_close": float(ys["t_close"][j]),
+                 "duration_s": float(ys["t_close"][j] - ys["t_open"][j]),
+                 "n_dispatched": int(ys["n_dispatched"][j]),
+                 "n_applied": int(ys["n_applied"][j]),
+                 "n_late": int(ys["n_late"][j]),
+                 "n_never": int(ys["n_never"][j]),
+                 "train_loss": float(ys["loss"][j])})
+            if self.emit_masks:
+                self.applied_log.append(ys["applied"][j])
+                self.cohort_log.append(ys["cohort"][j])
+
+    # ------------------------------------------------------------------ #
+    def run(self, n_rounds: int, *, eval_fn: Callable | None = None,
+            eval_every: int = 10, verbose: bool = False) -> None:
+        """Simulate `n_rounds` rounds, mutating the runner in place; evals
+        run at the heap engine's cadence, stamped at close + overhead."""
+        r = self.r
+        cfg = self.sim.config
+        evals = _eval_rounds(n_rounds, eval_every, eval_fn is not None)
+
+        def on_sync(t):
+            sim_t = float(np.float32(r.hist.sim_seconds[-1])
+                          + np.float32(cfg.server_overhead_s))
+            el, ea = r.evaluate(t, eval_fn, sim_time=sim_t)
+            if verbose:
+                print(f"  round {t:5d} sim_t={sim_t:10.2f}s "
+                      f"train={r.hist.train_loss[-1]:.4f} eval={el:.4f} "
+                      f"acc={ea:.4f}")
+
+        run_pipelined_chunks(
+            init_sim_carry(r, self.sim),
+            chunk_bounds(n_rounds, self.scan_chunk, evals),
+            chunk_fn=self._chunk_fn, build_xs=self._build_xs,
+            writeback=self._writeback, flush=self._flush,
+            sync_rounds=evals, on_sync=on_sync)
+
+
+def run_sim_scan(runner: RoundRunner, sim: SimSpec, n_rounds: int, *,
+                 scan_chunk: int = 64, eval_fn: Callable | None = None,
+                 eval_every: int = 10, verbose: bool = False):
+    """Convenience wrapper: drive `runner` through the compiled simulator
+    and return `(params, FLHistory)` — the `run_fl(sim=...)` fast path,
+    callable directly when you already hold a constructed runner."""
+    t0 = time.time()
+    SimScanDriver(runner, sim, scan_chunk=scan_chunk).run(
+        n_rounds, eval_fn=eval_fn, eval_every=eval_every, verbose=verbose)
+    runner.hist.wall_time = time.time() - t0
+    return runner.finalize()

@@ -13,15 +13,26 @@ Per server round t:
   2. Each cohort device's arrival time = (dispatch now, or the start of its
      next active epoch) + its RTT; arrivals are pushed on the event heap.
   3. policy.resolve(...) returns (close_time, applied_mask); the heap is
-     drained up to close_time (arrivals after it are logged as LATE/dropped).
+     drained up to close_time. Arrivals after it are logged as LATE 6-tuples
+     ``(arrival_time, seq, LATE, client, round, close_time)`` — the true
+     arrival time is preserved so lateness is measurable. Stateful policies
+     (``policy.stateful``, e.g. `BufferedKofN`) instead keep late arrivals
+     *in flight* on the heap and merge them into later rounds, with
+     staleness weights passed to weight-aware algorithms.
   4. RoundRunner.step(t, applied_mask, sim_time=close_time) applies the
      global update through the *unchanged* jitted round API.
+
+Simulated time is float32 end to end with the same op ordering as the
+compiled engine (`repro.sim.compiled`), so the two drivers produce
+bit-equal close times and applied masks — the heap stays the reference
+semantics; the compiled engine is the fast path.
 
 The same algorithm/round API therefore runs under any temporal policy, and
 FLHistory/TauStats carry a simulated-seconds axis for time-to-accuracy plots.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable
 
@@ -57,9 +68,17 @@ class FedSimEngine:
         self.config = config
         self.rng = np.random.default_rng(seed)
         self.queue = EventQueue()
-        self.now = 0.0
+        # simulated time is float32 end to end, with the same op order as
+        # the compiled engine (repro.sim.compiled) — close times and
+        # applied masks are therefore bit-equal across the two drivers
+        self.now = np.float32(0.0)
         self.event_log: list[tuple] = []
         self.round_log: list[dict] = []
+        self.applied_log: list[np.ndarray] = []
+        self.pstate = (policy.init_pstate(runner.n_clients)
+                       if getattr(policy, "stateful", False) else None)
+        self.n_never_total = 0
+        self._warned_never = False
         # seed the cache with the epoch-0 draw: validates the process width
         # without consuming a second sample(0) from stateful processes
         mask0 = np.asarray(participation.sample(0), bool)
@@ -97,45 +116,89 @@ class FedSimEngine:
     def run_round(self, t: int) -> dict:
         """Simulate one server round: dispatch, drain arrivals, apply the
         policy's mask through RoundRunner, advance the clock. Returns the
-        round record (open/close times, dispatch/applied/late counts)."""
+        round record (open/close times, dispatch/applied/late counts, plus
+        n_never — dispatched devices past the lookahead horizon)."""
         cfg = self.config
         n = self.runner.n_clients
-        now = self.now
-        cohort = np.asarray(self.policy.select(t, n, self.rng), bool)
-        rtt = np.asarray(self.latency.sample(t), np.float64)
-        k0 = int(now // cfg.epoch_s)
+        now = np.float32(self.now)
+        epoch_s = np.float32(cfg.epoch_s)
+        stateful = getattr(self.policy, "stateful", False)
+        if stateful:
+            cohort = np.asarray(
+                self.policy.select_pending(t, n, self.pstate), bool)
+        else:
+            cohort = np.asarray(self.policy.select(t, n, self.rng), bool)
+        rtt = np.asarray(self.latency.sample(t), np.float32)
+        k0 = int(now // epoch_s)
         avail_now = self.avail(k0)
 
-        arrivals = np.full(n, np.inf)
+        n_never = 0
+        arrivals = np.full(n, np.inf, np.float32)
         for i in np.flatnonzero(cohort):
             if avail_now[i]:
                 start = now
             else:
                 k = self._next_active_epoch(i, k0)
                 if k is None:
+                    n_never += 1
                     continue                      # never returns: stays inf
-                start = k * cfg.epoch_s
-            arrivals[i] = start + rtt[i]
+                start = np.float32(np.float32(k) * epoch_s)
+            arrivals[i] = np.float32(start + rtt[i])
             self.queue.push(arrivals[i], ARRIVAL, client=i, round=t)
+        if n_never:
+            self.n_never_total += n_never
+            if not self._warned_never:
+                self._warned_never = True
+                warnings.warn(
+                    f"{n_never} dispatched device(s) in round {t} never "
+                    "become available again within "
+                    f"SimConfig.max_lookahead_epochs={cfg.max_lookahead_epochs}"
+                    " epochs; their arrivals stay inf and they are dropped "
+                    "(raise the knob to look further ahead)", stacklevel=2)
 
-        close, applied = self.policy.resolve(cohort, avail_now, arrivals,
-                                             now, cfg.epoch_s)
+        weights = None
+        if stateful:
+            close, applied, weights, self.pstate = \
+                self.policy.resolve_pending(self.pstate, cohort, avail_now,
+                                            arrivals, now, epoch_s, t)
+        else:
+            close, applied = self.policy.resolve(cohort, avail_now, arrivals,
+                                                 now, epoch_s)
         n_late = 0
-        while len(self.queue):
-            ev = self.queue.pop()
-            if ev.time <= close and applied[ev.client]:
-                self.event_log.append(ev.as_tuple())
-            else:  # late responder (deadline) or unwaited-for (impatient)
-                n_late += 1
-                self.event_log.append((close, ev.seq, LATE, ev.client, t))
+        if stateful:
+            # buffered policies: arrivals after close stay IN FLIGHT on the
+            # heap (they merge into a later round's buffer) — drain <= close
+            while len(self.queue) and self.queue.peek().time <= close:
+                ev = self.queue.pop()
+                if applied[ev.client]:
+                    self.event_log.append(ev.as_tuple())
+                else:
+                    n_late += 1
+                    self.event_log.append((ev.time, ev.seq, LATE, ev.client,
+                                           t, close))
+        else:
+            while len(self.queue):
+                ev = self.queue.pop()
+                if ev.time <= close and applied[ev.client]:
+                    self.event_log.append(ev.as_tuple())
+                else:  # late responder (deadline) or unwaited-for (impatient)
+                    n_late += 1
+                    self.event_log.append((ev.time, ev.seq, LATE, ev.client,
+                                           t, close))
         self.event_log.append((close, -1, ROUND_CLOSE, -1, t))
 
-        metrics = self.runner.step(t, applied, sim_time=close)
-        self.now = close + cfg.server_overhead_s
-        rec = {"round": t, "t_open": now, "t_close": close,
-               "duration_s": close - now,
+        active = applied
+        if weights is not None and getattr(self.runner.algo, "weight_aware",
+                                           False):
+            active = weights
+        metrics = self.runner.step(t, active, sim_time=close)
+        self.applied_log.append(applied.copy())
+        self.now = np.float32(close) + np.float32(cfg.server_overhead_s)
+        rec = {"round": t, "t_open": float(now), "t_close": float(close),
+               "duration_s": float(close - now),
                "n_dispatched": int(cohort.sum()),
                "n_applied": int(applied.sum()), "n_late": n_late,
+               "n_never": n_never,
                "train_loss": float(metrics["loss"])}
         self.round_log.append(rec)
         return rec

@@ -1,12 +1,32 @@
 """Per-client round-trip latency models (compute + communication, seconds).
 
-`sample(t)` returns the full (N,) latency vector for round t; the engine
-indexes the cohort out of it, so draws are identical regardless of which
-clients a policy selects — runs with different policies but the same seeds see
-the same device speeds.
+Every model carries TWO sampling surfaces — the discipline
+`repro.scenarios` proved out for availability processes:
+
+  * jit-native: `sample_fn()` returns a pure ``(key, t, state) -> (N,)
+    float32`` function, safe under `jax.jit`/`jax.vmap`/`jax.lax.scan`.
+    Every numeric parameter rides the `state` pytree (`init_state()`), not
+    the function's closure, so the fleet executor can stack per-trial
+    latency parameters along its trial axis and the compiled simulator
+    (`repro.sim.compiled`) draws a whole round's RTTs inside the program.
+  * host: `sample(t)` returns the same (N,) vector as NumPy — it
+    *materialises* the jit surface (one jitted call per round), so the two
+    surfaces are bit-identical by construction. The heap engine indexes
+    the cohort out of the full vector, so draws are identical regardless
+    of which clients a policy selects — runs with different policies but
+    the same seeds see the same device speeds.
+
+Draws are keyed by ``jax.random.fold_in(key, t)``: RTTs depend only on
+(seed, t), never on query order. All values are float32 — simulated-time
+arithmetic is f32 end to end so the heap engine and the compiled engine
+produce bit-equal close times (see `repro.sim.engine`).
 """
 from __future__ import annotations
 
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -16,7 +36,43 @@ def _per_client(x, n: int) -> np.ndarray:
     return out
 
 
-class ShiftedExponentialLatency:
+class LatencyModel:
+    """Base latency law: two surfaces (host + jit) drawing identical RTTs.
+
+    Subclasses set `n` (device count) and `seed`, and implement
+    `init_state()` (parameter pytree with jnp leaves — nothing numeric may
+    hide in the sample function's closure) and `sample_fn()` (the pure jit
+    surface). `sample(t)` is inherited: it materialises the jit surface,
+    which is what makes the surfaces bit-identical by construction.
+    """
+
+    n: int
+    seed: int = 0
+
+    @property
+    def key(self) -> jax.Array:
+        """Base PRNG key; both surfaces derive round keys by fold_in(key, t)."""
+        return jax.random.PRNGKey(self.seed)
+
+    def init_state(self) -> dict:
+        """Jit-side parameter pytree (jnp leaves, stackable per fleet trial)."""
+        raise NotImplementedError
+
+    def sample_fn(self) -> Callable:
+        """Pure ``(key, t, state) -> (N,) float32 RTT seconds``, jit/vmap-safe."""
+        raise NotImplementedError
+
+    def sample(self, t: int) -> np.ndarray:
+        """(N,) float32 round-trip seconds for round t — the jit surface
+        materialised to NumPy, bit-identical to in-program draws."""
+        if getattr(self, "_host_fn", None) is None:
+            self._host_fn = jax.jit(self.sample_fn())
+            self._host_state = self.init_state()
+        return np.asarray(self._host_fn(self.key, jnp.int32(t),
+                                        self._host_state))
+
+
+class ShiftedExponentialLatency(LatencyModel):
     """t_i = shift_i + Exp(scale_i): the classic straggler model — a
     deterministic floor (compute at full utilisation + link RTT) plus an
     exponential tail (contention, background load)."""
@@ -26,14 +82,23 @@ class ShiftedExponentialLatency:
         self.n = n
         self.shifts = _per_client(shifts, n)
         self.scales = _per_client(scales, n)
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
 
-    def sample(self, t: int) -> np.ndarray:
-        """(N,) round-trip seconds for round t (fresh exponential draws)."""
-        return self.shifts + self.rng.exponential(self.scales)
+    def init_state(self) -> dict:
+        """{'shifts', 'scales'}: the (N,) f32 per-device parameters."""
+        return {"shifts": jnp.asarray(self.shifts, jnp.float32),
+                "scales": jnp.asarray(self.scales, jnp.float32)}
+
+    def sample_fn(self) -> Callable:
+        """Pure ``(key, t, state) -> (N,) f32``: shift + scale·Exp(1) draws."""
+        def rtt_fn(key, t, state):
+            e = jax.random.exponential(jax.random.fold_in(key, t),
+                                       state["shifts"].shape, jnp.float32)
+            return state["shifts"] + state["scales"] * e
+        return rtt_fn
 
 
-class LognormalLatency:
+class LognormalLatency(LatencyModel):
     """Compute time exp(N(mu_i, sigma_i)) plus a fixed comm cost comm_i —
     heavy-tailed device speed, as measured in production FL fleets."""
 
@@ -44,25 +109,44 @@ class LognormalLatency:
         self.mu = np.broadcast_to(np.asarray(mu, np.float64), (n,)).copy()
         self.sigma = _per_client(sigma, n)
         self.comm = _per_client(comm, n)
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
 
-    def sample(self, t: int) -> np.ndarray:
-        """(N,) round-trip seconds: lognormal compute + fixed comm cost."""
-        return np.exp(self.rng.normal(self.mu, self.sigma)) + self.comm
+    def init_state(self) -> dict:
+        """{'mu', 'sigma', 'comm'}: the (N,) f32 per-device parameters."""
+        return {"mu": jnp.asarray(self.mu, jnp.float32),
+                "sigma": jnp.asarray(self.sigma, jnp.float32),
+                "comm": jnp.asarray(self.comm, jnp.float32)}
+
+    def sample_fn(self) -> Callable:
+        """Pure ``(key, t, state) -> (N,) f32``: exp(mu + sigma·z) + comm."""
+        def rtt_fn(key, t, state):
+            z = jax.random.normal(jax.random.fold_in(key, t),
+                                  state["mu"].shape, jnp.float32)
+            return jnp.exp(state["mu"] + state["sigma"] * z) + state["comm"]
+        return rtt_fn
 
 
-class TraceLatency:
+class TraceLatency(LatencyModel):
     """Replay a recorded (T, N) matrix of round-trip seconds; rounds past the
-    trace end replay the last row."""
+    trace end replay the last row. Deterministic: the jit surface ignores
+    its key and gathers the clamped row from the trace riding `state`."""
 
     def __init__(self, trace: np.ndarray):
         self.trace = np.array(trace, np.float64, copy=True)
         assert self.trace.ndim == 2 and np.all(self.trace >= 0)
         self.n = self.trace.shape[1]
+        self.seed = 0
 
-    def sample(self, t: int) -> np.ndarray:
-        """(N,) recorded round-trip seconds for round t (clamped replay)."""
-        return self.trace[min(t, len(self.trace) - 1)].copy()
+    def init_state(self) -> dict:
+        """{'trace'}: the recorded (T, N) f32 RTT matrix."""
+        return {"trace": jnp.asarray(self.trace, jnp.float32)}
+
+    def sample_fn(self) -> Callable:
+        """Pure ``(key, t, state) -> (N,) f32``: clamped trace-row replay."""
+        def rtt_fn(key, t, state):
+            tr = state["trace"]
+            return tr[jnp.minimum(t, tr.shape[0] - 1)]
+        return rtt_fn
 
 
 def tiered_shifted_exponential(n: int, *, tiers=((2.0, 1.0), (1.0, 0.4),

@@ -18,34 +18,65 @@ the lookahead horizon), and gets back (close_time, applied_mask):
   * Impatient  — MIFA's server: close as soon as every *currently available*
     device has responded; never wait for unavailable ones (memory corrects
     the bias on the algorithm side).
+  * BufferedKofN — FedBuff-style buffered-async server: close at the K-th
+    arrival, keep later responders *in flight* (they land in later rounds,
+    staleness-discounted), never re-dispatch an in-flight device.
+
+Every policy also exposes a **unified parametric form** (`unified(n)` +
+the module-level `unified_select` / `unified_resolve` pure functions) so
+the compiled simulator (`repro.sim.compiled`) can lift ALL policies into
+one jit-able ``(params, pstate, arrivals) -> (close, applied, weights)``
+surface whose parameters ride the scan carry — mixed-policy fleets then
+vmap as a single program. Cohort sampling is keyed by
+``jax.random.fold_in(sel_key, t)`` on both the host and jit surfaces, so
+the heap engine and the compiled engine select bit-identical cohorts. All
+time arithmetic is float32 on both surfaces (see `repro.sim.engine`).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import ClassVar
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+_INF32 = np.float32(np.inf)
 
-def _sample_cohort(n: int, k: int, rng) -> np.ndarray:
+
+def _fold_in_cohort(sel_seed: int, t: int, n: int, k: int) -> np.ndarray:
+    """Host cohort mask: first k entries of the fold_in(sel_seed, t)
+    permutation — the materialised twin of `unified_select`'s jit draw."""
+    if k >= n:
+        return np.ones(n, bool)
+    key = jax.random.fold_in(jax.random.PRNGKey(sel_seed), t)
+    perm = np.asarray(jax.random.permutation(key, n))
     mask = np.zeros(n, bool)
-    mask[rng.permutation(n)[:k]] = True
+    mask[perm[:k]] = True
     return mask
 
 
 def _close_at_last_finite(arrivals: np.ndarray, mask: np.ndarray, now: float,
-                          idle_s: float) -> tuple[float, np.ndarray]:
+                          idle_s: float) -> tuple[np.float32, np.ndarray]:
+    """Close at the last finite arrival in `mask` (float32), or idle one
+    epoch if nobody in the wait set ever returns."""
     applied = mask & np.isfinite(arrivals)
     if not applied.any():
-        return now + idle_s, applied
-    return float(arrivals[applied].max()), applied
+        return np.float32(now) + np.float32(idle_s), applied
+    return np.float32(arrivals[applied].max()), applied
 
 
 @dataclass(frozen=True)
 class WaitForAll:
+    """Fully synchronous server: broadcast, then block for every responder."""
+
     name: str = "wait_for_all"
+    sel_seed: int = 0
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
-        """Dispatch round t to all n devices: (N,) all-True cohort mask."""
+        """Dispatch round t to all n devices: (N,) all-True cohort mask.
+        (`rng` is accepted for engine compatibility but unused — selection
+        is keyed, so both simulation surfaces agree.)"""
         return np.ones(n, bool)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
@@ -53,20 +84,38 @@ class WaitForAll:
         mask). Devices that never return (inf arrival) are dropped."""
         return _close_at_last_finite(arrivals, cohort, now, epoch_s)
 
+    def unified(self, n: int) -> dict:
+        """Parametric form: broadcast (sel_k=0), wait for all finite
+        arrivals (wait_mode=1), no deadline, unbuffered."""
+        return dict(sel_k=0, wait_avail_only=False, wait_mode=1, buffer_k=0,
+                    deadline_s=np.inf, buffered=False, sel_seed=self.sel_seed)
+
 
 @dataclass(frozen=True)
 class WaitForS:
+    """The paper's Eq. 3 protocol: sample S devices, block for all S."""
+
     s: int
     name: str = "wait_for_s"
+    sel_seed: int = 0
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
-        """Sample S of n devices uniformly (paper Eq. 3): (N,) cohort mask."""
-        return _sample_cohort(n, self.s, rng)
+        """Sample S of n devices uniformly (paper Eq. 3): (N,) cohort mask,
+        keyed by fold_in(sel_seed, t) so both surfaces pick the same S.
+        (`rng` is accepted for engine compatibility but unused.)"""
+        return _fold_in_cohort(self.sel_seed, t, n, self.s)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
         """Block until every sampled device responds: (close_time, applied
         mask) at the last finite arrival — the straggler-bound baseline."""
         return _close_at_last_finite(arrivals, cohort, now, epoch_s)
+
+    def unified(self, n: int) -> dict:
+        """Parametric form: sample sel_k=s, wait for all finite arrivals
+        (wait_mode=1), no deadline, unbuffered."""
+        return dict(sel_k=self.s, wait_avail_only=False, wait_mode=1,
+                    buffer_k=0, deadline_s=np.inf, buffered=False,
+                    sel_seed=self.sel_seed)
 
 
 @dataclass(frozen=True)
@@ -77,18 +126,29 @@ class Deadline:
     deadline_s: float
     cohort_size: int | None = None
     name: str = "deadline"
+    sel_seed: int = 0
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
-        """Broadcast, or over-select `cohort_size` devices: (N,) mask."""
+        """Broadcast, or over-select `cohort_size` devices: (N,) mask keyed
+        by fold_in(sel_seed, t). (`rng` kept for compatibility, unused.)"""
         if self.cohort_size is None or self.cohort_size >= n:
             return np.ones(n, bool)
-        return _sample_cohort(n, self.cohort_size, rng)
+        return _fold_in_cohort(self.sel_seed, t, n, self.cohort_size)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
         """Close exactly at now + deadline_s; apply whoever arrived by
         then (late responders are dropped): (close_time, applied mask)."""
-        close = now + self.deadline_s
+        close = np.float32(now) + np.float32(self.deadline_s)
         return close, cohort & (arrivals <= close)
+
+    def unified(self, n: int) -> dict:
+        """Parametric form: cohort of sel_k (0 = broadcast), deadline-only
+        close (wait_mode=0), unbuffered."""
+        k = 0 if self.cohort_size is None or self.cohort_size >= n \
+            else self.cohort_size
+        return dict(sel_k=k, wait_avail_only=False, wait_mode=0, buffer_k=0,
+                    deadline_s=self.deadline_s, buffered=False,
+                    sel_seed=self.sel_seed)
 
 
 @dataclass(frozen=True)
@@ -96,9 +156,11 @@ class Impatient:
     """MIFA: wait only for devices available at dispatch time."""
 
     name: str = "impatient"
+    sel_seed: int = 0
 
     def select(self, t: int, n: int, rng) -> np.ndarray:
-        """Dispatch to every device: (N,) all-True cohort mask."""
+        """Dispatch to every device: (N,) all-True cohort mask. (`rng` kept
+        for engine compatibility, unused.)"""
         return np.ones(n, bool)
 
     def resolve(self, cohort, avail_now, arrivals, now, epoch_s):
@@ -106,3 +168,168 @@ class Impatient:
         wait for currently-unavailable ones: (close_time, applied mask)."""
         return _close_at_last_finite(arrivals, cohort & avail_now, now,
                                      epoch_s)
+
+    def unified(self, n: int) -> dict:
+        """Parametric form: broadcast, wait set restricted to devices
+        available at dispatch (wait_avail_only), wait_mode=1, unbuffered."""
+        return dict(sel_k=0, wait_avail_only=True, wait_mode=1, buffer_k=0,
+                    deadline_s=np.inf, buffered=False, sel_seed=self.sel_seed)
+
+
+@dataclass(frozen=True)
+class BufferedKofN:
+    """FedBuff-style buffered-async server: close each round at the K-th
+    update arrival; slower responders stay *in flight* and merge into a
+    later round's buffer with a staleness discount 1/sqrt(1 + s), where s
+    is the merge round minus the dispatch round. In-flight devices are not
+    re-dispatched. An optional deadline_s caps how long the server blocks
+    when fewer than K updates are in flight."""
+
+    k: int
+    deadline_s: float = np.inf
+    name: str = "buffered"
+    sel_seed: int = 0
+
+    stateful: ClassVar[bool] = True
+
+    def init_pstate(self, n: int) -> dict:
+        """Fresh in-flight buffer: pending (N,) f32 arrival times (inf =
+        nothing in flight) and pending_t (N,) dispatch rounds."""
+        return {"pending": np.full(n, _INF32, np.float32),
+                "pending_t": np.zeros(n, np.int64)}
+
+    def select_pending(self, t: int, n: int, pstate: dict) -> np.ndarray:
+        """Dispatch to every device with no update in flight: (N,) mask."""
+        return ~np.isfinite(pstate["pending"])
+
+    def resolve_pending(self, pstate, cohort, avail_now, arrivals, now,
+                        epoch_s, t):
+        """Merge this round's arrivals with the in-flight buffer and close
+        at the K-th smallest arrival (capped by deadline_s; idle one epoch
+        if nothing is in flight). Returns (close, applied, staleness
+        weights, new pstate) — the float32 host mirror of
+        `unified_resolve`'s buffered branch."""
+        merged = np.where(cohort, arrivals.astype(np.float32),
+                          pstate["pending"]).astype(np.float32)
+        merged_t = np.where(cohort, t, pstate["pending_t"])
+        finite = np.isfinite(merged)
+        n_finite = int(finite.sum())
+        k_eff = min(self.k, n_finite)
+        idle = np.float32(now) + np.float32(epoch_s)
+        if k_eff > 0:
+            kth = np.sort(np.where(finite, merged, _INF32))[k_eff - 1]
+        else:
+            kth = idle
+        close = np.minimum(np.float32(kth),
+                           np.float32(now) + np.float32(self.deadline_s))
+        applied = finite & (merged <= close)
+        stale = (np.int64(t) - merged_t).astype(np.float32)
+        weights = np.where(
+            applied, np.float32(1.0) / np.sqrt(np.float32(1.0) + stale),
+            np.float32(0.0)).astype(np.float32)
+        pstate = {"pending": np.where(applied, _INF32,
+                                      merged).astype(np.float32),
+                  "pending_t": np.where(applied, 0, merged_t)}
+        return close, applied, weights, pstate
+
+    def unified(self, n: int) -> dict:
+        """Parametric form: broadcast minus in-flight, K-th-arrival close
+        (wait_mode=2, buffer_k=k), buffered merges with staleness."""
+        return dict(sel_k=0, wait_avail_only=False, wait_mode=2,
+                    buffer_k=self.k, deadline_s=self.deadline_s,
+                    buffered=True, sel_seed=self.sel_seed)
+
+
+# --------------------------------------------------------------------- #
+# Unified jit-native surface: one pure (params, state) algebra covering
+# every policy above, so the compiled simulator threads a single resolve
+# through lax.scan and mixed-policy fleets vmap as one program.
+# --------------------------------------------------------------------- #
+
+def policy_params(policy, n: int) -> dict:
+    """Lift `policy` into the unified parameter pytree (jnp leaves, so a
+    fleet can stack heterogeneous policies along its trial axis): sel_k,
+    wait_avail_only, wait_mode (0=deadline-only, 1=all-finite, 2=buffer-K),
+    buffer_k, deadline_s, buffered, sel_key."""
+    u = policy.unified(n)
+    return {"sel_k": jnp.int32(u["sel_k"]),
+            "wait_avail_only": jnp.bool_(u["wait_avail_only"]),
+            "wait_mode": jnp.int32(u["wait_mode"]),
+            "buffer_k": jnp.int32(u["buffer_k"]),
+            "deadline_s": jnp.float32(u["deadline_s"]),
+            "buffered": jnp.bool_(u["buffered"]),
+            "sel_key": jax.random.PRNGKey(u["sel_seed"])}
+
+
+def init_policy_state(n: int) -> dict:
+    """Jit-side policy state riding the scan carry: the in-flight buffer
+    (pending arrival times + dispatch rounds); inert for unbuffered
+    policies, but kept shape-uniform so every policy shares one carry."""
+    return {"pending": jnp.full(n, jnp.inf, jnp.float32),
+            "pending_t": jnp.zeros(n, jnp.int32)}
+
+
+def unified_select(t, pp: dict, pstate: dict):
+    """Pure cohort draw for round t: first sel_k entries of the
+    fold_in(sel_key, t) permutation (sel_k=0 broadcasts), minus in-flight
+    devices when buffered. Bit-identical to the host policies' select."""
+    n = pstate["pending"].shape[0]
+    perm = jax.random.permutation(jax.random.fold_in(pp["sel_key"], t), n)
+    pos = jnp.zeros(n, jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
+    mask = jnp.where(pp["sel_k"] > 0, pos < pp["sel_k"], True)
+    return mask & jnp.where(pp["buffered"],
+                            ~jnp.isfinite(pstate["pending"]), True)
+
+
+def unified_resolve(pp: dict, pstate: dict, cohort, avail_now, arrivals,
+                    now, epoch_s, t):
+    """Pure round close for ALL policies: (close, applied, weights, new
+    pstate, info). `arrivals` is the (N,) f32 vector (inf = never returns);
+    every branch of the policy algebra is computed and selected by the
+    params, so the function is jit/vmap-safe with no Python control flow.
+
+    The algebra: merge arrivals with the in-flight buffer (buffered only);
+    the wait set is either the finite arrivals or, for wait_avail_only
+    (Impatient), the cohort devices available at dispatch; close at the
+    K-th smallest waited arrival (K = all finite for wait_mode=1, buffer_k
+    for wait_mode=2, none for the deadline-only wait_mode=0), capped by
+    now + deadline_s. Applied = waited arrivals that landed by close;
+    weights are 1 or the buffered staleness discount 1/sqrt(1+s). `info`
+    carries n_late (finite-but-dropped, heap LATE semantics) and n_never
+    (cohort devices past the lookahead horizon)."""
+    inf = jnp.float32(jnp.inf)
+    arrivals = arrivals.astype(jnp.float32)
+    arr_in = jnp.where(cohort, arrivals, inf)
+    merged = jnp.where(pp["buffered"],
+                       jnp.where(cohort, arrivals, pstate["pending"]),
+                       arr_in)
+    merged_t = jnp.where(cohort, jnp.int32(t), pstate["pending_t"])
+    finite = jnp.isfinite(merged)
+    waitset = jnp.where(pp["wait_avail_only"], cohort & avail_now, finite)
+    wait_fin = waitset & finite
+    wait_arr = jnp.where(wait_fin, merged, inf)
+    n_finite = jnp.sum(wait_fin).astype(jnp.int32)
+    k = jnp.where(pp["wait_mode"] == 2,
+                  jnp.minimum(pp["buffer_k"], n_finite),
+                  jnp.where(pp["wait_mode"] == 1, n_finite, 0))
+    kth = jnp.sort(wait_arr)[jnp.maximum(k - 1, 0)]
+    idle = now + epoch_s
+    arr_close = jnp.where(k > 0, kth, idle)
+    ddl = now + pp["deadline_s"]
+    close = jnp.where(pp["wait_mode"] == 0, ddl,
+                      jnp.minimum(arr_close, ddl)).astype(jnp.float32)
+    applied = waitset & (merged <= close)
+    stale = (jnp.int32(t) - merged_t).astype(jnp.float32)
+    w_buf = jnp.float32(1.0) / jnp.sqrt(jnp.float32(1.0) + stale)
+    weights = jnp.where(applied,
+                        jnp.where(pp["buffered"], w_buf, jnp.float32(1.0)),
+                        jnp.float32(0.0)).astype(jnp.float32)
+    keep = pp["buffered"] & ~applied
+    new_pstate = {"pending": jnp.where(keep, merged, inf),
+                  "pending_t": jnp.where(keep, merged_t, 0)}
+    info = {"n_late": jnp.sum(finite & ~applied
+                              & ~pp["buffered"]).astype(jnp.int32),
+            "n_never": jnp.sum(cohort
+                               & ~jnp.isfinite(arrivals)).astype(jnp.int32)}
+    return close, applied, weights, new_pstate, info

@@ -27,6 +27,8 @@ MODULES = [
     "repro.sim.policies",
     "repro.sim.latency",
     "repro.sim.engine",
+    "repro.sim.compiled",
+    "repro.fleet.sim",
     "repro.scenarios.base",
     "repro.scenarios.processes",
     "repro.scenarios.registry",
