@@ -18,6 +18,10 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
   scenario_grid    : algorithm × availability-scenario convergence grid
                      (repro.scenarios): MIFA-vs-FedAvg gap under
                      correlated / non-stationary availability
+  scenario_atlas   : competing-baseline atlas — every registered
+                     algorithm (incl. FedAR, CA-Fed) × scenario × seed
+                     as jit(scan(vmap)) fleet programs, with per-scenario
+                     winner table
   scan_scale       : whole-run scan engine (core.scan_engine) vs the
                      per-round dispatch loop — rounds/sec across T
 """
@@ -41,7 +45,8 @@ def main() -> None:
 
     names = ("tau_stats", "agg_throughput", "adversarial", "case_study",
              "fig2_convergence", "roofline_bench", "time_to_accuracy",
-             "bank_scale", "fleet_scale", "scenario_grid", "scan_scale")
+             "bank_scale", "fleet_scale", "scenario_grid", "scenario_atlas",
+             "scan_scale")
     # validate BEFORE any benchmark module imports: a typo'd --only must
     # not silently run *nothing* (hollow CI smoke steps), and it must not
     # die on some unrelated module's import error either

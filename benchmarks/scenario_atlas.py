@@ -1,0 +1,168 @@
+"""Competing-baseline atlas: six algorithms × five availability scenarios.
+
+The scenario grid (scenario_grid.py) established WHERE memorisation pays:
+the MIFA-vs-FedAvg gap widens as availability grows correlated and
+non-stationary. This benchmark asks the follow-up question the related
+work poses: among the COMPETING fixes — memorisation with staleness
+rectification (FedAR), correlation-aware reweighting (CA-Fed), known-prob
+importance sampling (FedAvg-IS) — which mechanism wins in which
+availability regime, and does each one's win region match the assumptions
+it makes (docs/scenarios.md, "Algorithm taxonomy")?
+
+Every registered algorithm (`repro.core.algorithms`) runs over the full
+`scenario_axis` × seeds sweep through the SAME `sweep_cells` machinery as
+the grid, but with `engine="scan"`: each cell's seeds execute as one
+jit(scan(vmap)) fleet program (FleetScanDriver), so adding an algorithm
+costs one more compiled program, not a new harness. Emits
+benchmarks/artifacts/scenario_atlas.{json,md} with a per-scenario winner
+table; CI pins the winners' losses and the worst-case regressions via
+benchmarks/baselines/ci_baseline.json.
+"""
+from __future__ import annotations
+
+import os
+
+from common import ARTIFACTS, save_artifact
+from scenario_grid import sweep_cells
+
+from repro.core import algorithm_assumes, algorithm_names
+
+# docs/scenarios.md "Algorithm taxonomy": what each `assumes` tag claims
+# about the availability process, keyed to the paper's Defs 5.1/5.2 and
+# Assumption 4.
+ASSUME_NOTES = {
+    "arbitrary": "any A(t), incl. adversarial (paper setting, Assumption 4)",
+    "iid_known_probs": "independent per-round activity with KNOWN marginals",
+    "stationary_mixing": "stationary, fast-mixing per-client availability "
+                         "chains (estimable online)",
+    "none": "no availability model; averages whoever shows up",
+}
+
+
+def main(fast: bool = False) -> None:
+    n_clients = 20 if fast else 60
+    n_rounds = 30 if fast else 160
+    seeds = (0,) if fast else (0, 1, 2)
+    stage_len = max(n_rounds // 5, 4)
+    algos = algorithm_names()
+
+    results = sweep_cells(algo_names=algos, n_clients=n_clients,
+                          n_rounds=n_rounds, seeds=seeds,
+                          stage_len=stage_len, engine="scan",
+                          emit_prefix="scenario_atlas",
+                          n_per_class=120 if fast else 500)
+    results["assumes"] = {name: algorithm_assumes(name, n=n_clients)
+                          for name in algos}
+    save_artifact("scenario_atlas", results)
+    if not fast:
+        # as with the grid: the committed .md is the full-scale table; a
+        # --fast (CI smoke) run must never clobber it with toy numbers
+        write_md(results)
+
+
+def write_md(results: dict) -> None:
+    """benchmarks/artifacts/scenario_atlas.md — winner table + taxonomy."""
+    cells = results["cells"]
+    algos = results["algorithms"]
+    assumes = results["assumes"]
+    lines = [
+        "# Scenario atlas: competing baselines under every availability "
+        "regime",
+        "",
+        f"Six-algorithm fleet sweep: N={results['n_clients']} clients, "
+        f"T={results['n_rounds']} rounds, seeds={results['seeds']}, "
+        "logistic model on synthetic non-iid data, every cell compiled as "
+        "one `jit(scan(vmap))` fleet program (`engine=\"scan\"`). Scenario "
+        "axis and calibration are the scenario grid's (scenario_grid.md); "
+        "this table adds the competing availability-robust baselines from "
+        "the related work. Regenerate with `PYTHONPATH=src python "
+        "benchmarks/run.py --only scenario_atlas` (docs/benchmarks.md).",
+        "",
+        "## Algorithm taxonomy",
+        "",
+        "| algorithm | assumes | meaning |",
+        "|---|---|---|",
+    ]
+    for name in algos:
+        tag = assumes[name]
+        lines.append(f"| {name} | `{tag}` | {ASSUME_NOTES[tag]} |")
+    lines += [
+        "",
+        "## Final eval loss (mean over seeds)",
+        "",
+        "| scenario | " + " | ".join(algos) + " | winner |",
+        "|---|" + "---|" * (len(algos) + 1),
+    ]
+    for c in cells:
+        row = [c["scenario"]]
+        for name in algos:
+            v = c["algorithms"][name]["final_loss_mean"]
+            cell = f"{v:.4f}"
+            if name == c["winner"]:
+                cell = f"**{cell}**"
+            row.append(cell)
+        row.append(c["winner"])
+        lines.append("| " + " | ".join(row) + " |")
+    lines += [
+        "",
+        "## Gap vs MIFA (final loss − mifa final loss; positive = MIFA "
+        "better)",
+        "",
+        "| scenario | " + " | ".join(a for a in algos if a != "mifa")
+        + " |",
+        "|---|" + "---|" * (len(algos) - 1),
+    ]
+    for c in cells:
+        row = [c["scenario"]]
+        for name in algos:
+            if name == "mifa":
+                continue
+            row.append(f"{c['gaps'][f'{name}_minus_mifa']:+.4f}")
+        lines.append("| " + " | ".join(row) + " |")
+    lines += [
+        "",
+        "## Reading the atlas",
+        "",
+        "Two families, two failure axes. The REWEIGHTING family "
+        "(`fedavg_is`, `ca_fed`) carries 1/p̂-style weights, which on "
+        "this convex ≈0.5-rate problem both unbias the average and "
+        "roughly double the effective step — so raw cross-family loss "
+        "comparisons mix step-size effects with bias correction, and the "
+        "informative reads are *within* family. Within reweighting: "
+        "`fedavg_is` (fixed oracle marginals) ends lowest on every "
+        "STATIONARY cell — even long bursts and cluster outages, where "
+        "the marginals stay correct and convexity absorbs the extra "
+        "variance — but finishes worst of all six on the non-stationary "
+        "staged blackout, where the oracle rate (the process's all-on "
+        "final stage) is simply wrong mid-run. `ca_fed` pays estimation "
+        "noise for adaptivity: a little behind the oracle on every "
+        "stationary cell, decisive winner on the blackout, because its "
+        "EWMAs re-estimate availability as the stages shift and its "
+        "burst-exclusion rule drops blacked-out clients instead of "
+        "stalling — the oracle's fixed assumption, not the weighting, is "
+        "the brittle part. Within the MEMORISATION family (`mifa`, "
+        "`banked_mifa`, `fedar`): banked is bit-identical to dense "
+        "(gap ±0.0000, the CI-pinned invariant); `fedar`'s decay^τ "
+        "rectification tracks MIFA within ±0.02 everywhere, giving back "
+        "the most exactly where staleness is heaviest (cluster, +0.02 — "
+        "discounting stale surrogates reintroduces a little cohort "
+        "bias). And the no-model family's internal gap is the paper's "
+        "headline: `fedavg` matches `mifa` under iid (-0.005) and loses "
+        "by +0.0657 under cluster outages, the widening the scenario "
+        "grid tracks. No single column dominates every row — each "
+        "mechanism buys its wins with an availability assumption some "
+        "scenario violates; memorisation is the only family whose "
+        "guarantees need none (Assumption 4 aside), which is the paper's "
+        "robustness claim in table form.",
+        "",
+    ]
+    path = os.path.join(ARTIFACTS, "scenario_atlas.md")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

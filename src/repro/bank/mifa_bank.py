@@ -24,6 +24,8 @@ class BankedMIFA:
     """memory-bank MIFA; `bank` picks the storage backend."""
 
     cohort_based = True
+    # same regime as MIFA: memorisation, no availability-law knowledge
+    assumes = "arbitrary"
 
     def __init__(self, bank: MemoryBank):
         self.bank = bank

@@ -1,8 +1,11 @@
 """MIFA core: the paper's contribution (Algorithm 1 + baselines + availability)."""
 from repro.core.mifa import MIFA  # noqa: F401
-from repro.core.baselines import (BiasedFedAvg, FedAvgIS,  # noqa: F401
-                                  FedAvgSampling, FedBuffAvg,
+from repro.core.baselines import (BiasedFedAvg, CAFed, FedAR,  # noqa: F401
+                                  FedAvgIS, FedAvgSampling, FedBuffAvg,
                                   SCAFFOLDSampling)
+from repro.core.algorithms import (algorithm_assumes,  # noqa: F401
+                                   algorithm_names, make_algorithm,
+                                   register_algorithm)
 from repro.core.participation import (AdversarialParticipation,  # noqa: F401
                                       BernoulliParticipation,
                                       TraceParticipation, TauStats,

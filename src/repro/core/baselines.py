@@ -17,8 +17,30 @@
                          staleness-weighted updates delivered by the
                          `repro.sim.BufferedKofN` server policy.
 
+Competing memorisation / reweighting mechanisms from the related work
+(PAPERS.md; docs/scenarios.md maps each to the paper's taxonomy):
+
+  * FedAR              — local-update approximation + rectification (Jiang
+                         et al., arXiv 2407.19103): the server keeps every
+                         client's latest update as a surrogate (like MIFA's
+                         memory) but *rectifies* the average with
+                         staleness-decayed, re-normalised weights instead
+                         of weighting surrogates uniformly.
+  * CAFed              — correlated-availability weighting (Rodio et al.,
+                         arXiv 2301.04632): aggregation weights adapt
+                         online to availability estimates (EWMA activity +
+                         chain-persistence) maintained in-state from the
+                         observed `active` masks; clients whose
+                         availability chain mixes too slowly are excluded.
+
 All share MIFA's round API: init_state / round_step(state, params, updates,
-losses, active, eta, rng).
+losses, active, eta, rng) — pure round fns, so every algorithm inherits
+fleet vmapping (`repro.fleet`) and whole-run scan compilation
+(`core.scan_engine`) for free. The `assumes` tag names the availability
+regime each mechanism needs (docs/scenarios.md "Algorithm taxonomy"):
+'arbitrary' (Assumption 4 only), 'iid_known_probs' (Definition 5.2 with
+oracle p_i), 'stationary_mixing' (estimable stationary chain), or 'none'
+(no correction — biased under correlated availability).
 """
 from __future__ import annotations
 
@@ -27,12 +49,15 @@ from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mifa import _bcast
 
 
 @dataclass(frozen=True)
 class BiasedFedAvg:
+    assumes: ClassVar[str] = "none"
+
     def init_state(self, params, n_clients: int) -> dict:
         return {"t": jnp.zeros((), jnp.int32)}
 
@@ -63,6 +88,7 @@ class FedBuffAvg:
     """
 
     weight_aware: ClassVar[bool] = True
+    assumes: ClassVar[str] = "none"
 
     def init_state(self, params, n_clients: int) -> dict:
         """Stateless aggregation: only the round counter `t`."""
@@ -86,25 +112,182 @@ class FedBuffAvg:
 
 @dataclass(frozen=True)
 class FedAvgIS:
-    """Requires the true participation probabilities (N,)."""
+    """Requires the true participation probabilities (N,).
 
-    probs: tuple  # static tuple so the dataclass stays hashable for jit
+    `probs` is a construction-time convenience only: `init_state` embeds it
+    in the algorithm STATE pytree (the same pattern scenario parameters
+    use), so the traced round function never reads it from `self` — two
+    runs with distinct probability vectors share one jit trace, and
+    mixed-probs trials can batch along the fleet's trial axis by stacking
+    their states. (It used to be a jit-static tuple: every new vector
+    retraced the whole program.)
+
+    Zero-probability clients are excluded from the importance sum rather
+    than divided by: a p_i = 0 device can never legitimately participate,
+    and `act/p` would turn one stray activation into inf/nan params.
+    """
+
+    probs: tuple  # tuple only to keep the dataclass hashable for jit
+    assumes: ClassVar[str] = "iid_known_probs"
+
+    def __post_init__(self):
+        # accept any array-like; normalise so equal vectors hash equal
+        object.__setattr__(
+            self, "probs",
+            tuple(float(p) for p in np.atleast_1d(np.asarray(self.probs))))
 
     def init_state(self, params, n_clients: int) -> dict:
-        return {"t": jnp.zeros((), jnp.int32)}
+        assert len(self.probs) == n_clients, (len(self.probs), n_clients)
+        return {"t": jnp.zeros((), jnp.int32),
+                "probs": jnp.asarray(self.probs, jnp.float32)}
 
     def round_step(self, state, params, updates, losses, active, eta, rng=None):
         act = active.astype(jnp.float32)
-        p = jnp.asarray(self.probs, jnp.float32)
-        w_is = act / p                       # (N,)
+        p = state["probs"]                   # (N,) — rides the state pytree
+        w_is = jnp.where(p > 0, act / jnp.maximum(p, 1e-12), 0.0)
         n = act.shape[0]
         mean_G = jax.tree.map(
             lambda u: jnp.sum(u * _bcast(w_is, u), 0) / n, updates)
         new_params = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype),
                                   params, mean_G)
         loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
-        return ({"t": state["t"] + 1}, new_params,
+        return ({"t": state["t"] + 1, "probs": p}, new_params,
                 {"loss": loss, "n_active": jnp.sum(act)})
+
+
+@dataclass(frozen=True)
+class FedAR:
+    """FedAR-style local-update approximation + rectification (Jiang et al.,
+    "FedAR: Addressing Client Unavailability in Federated Learning with
+    Local Update Approximation and Rectification", arXiv 2407.19103).
+
+    Approximation: the server keeps each client's most recent update U^i as
+    a surrogate for the one it cannot observe this round — the same
+    memorisation MIFA performs. Rectification: instead of averaging the
+    surrogates uniformly (MIFA), each surrogate is discounted by its
+    staleness and the weights are re-normalised:
+
+        U^i_t = u^i_t            if i ∈ A(t)     (fresh update)
+              = U^i_{t-1}        otherwise       (surrogate)
+        τ_i   = rounds since i last participated (0 when fresh)
+        α_i   = decay^τ_i,     w_{t+1} = w_t − η · Σ_i α_i U^i_t / Σ_i α_i
+
+    The decay knob interpolates between the two competing mechanisms:
+    decay=1 is exactly MIFA's uniform memory average, decay=0 is
+    BiasedFedAvg (stale surrogates vanish, 0^0 = 1 keeps fresh ones).
+    Surrogates and staleness ride the state pytree exactly like MIFA's
+    memory, so fleet vmapping and scan compilation apply unchanged. Like
+    MIFA it needs no knowledge of the availability law — only Assumption 4
+    for the theory — hence `assumes = 'arbitrary'`.
+    """
+
+    decay: float = 0.5
+    assumes: ClassVar[str] = "arbitrary"
+
+    def init_state(self, params, n_clients: int) -> dict:
+        return {"U": jax.tree.map(
+                    lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32),
+                    params),
+                "tau": jnp.zeros((n_clients,), jnp.int32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def round_step(self, state, params, updates, losses, active, eta,
+                   rng=None):
+        act = active.astype(jnp.float32)
+        U = jax.tree.map(
+            lambda u_old, u: jnp.where(_bcast(active, u), u, u_old),
+            state["U"], updates)
+        tau = jnp.where(active, 0, state["tau"] + 1)
+        alpha = jnp.power(jnp.float32(self.decay), tau.astype(jnp.float32))
+        denom = jnp.maximum(jnp.sum(alpha), 1.0)
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(alpha, u), 0) / denom, U)
+        new_params = jax.tree.map(lambda w, g: (w - eta * g).astype(w.dtype),
+                                  params, mean_G)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        return ({"U": U, "tau": tau, "t": state["t"] + 1}, new_params,
+                {"loss": loss, "n_active": jnp.sum(act)})
+
+
+@dataclass(frozen=True)
+class CAFed:
+    """Correlated-availability weighting, after Rodio et al., "Federated
+    Learning under Heterogeneous and Correlated Client Availability"
+    (arXiv 2301.04632) — CA-Fed.
+
+    CA-Fed adapts each client's aggregation weight to ONLINE estimates of
+    its availability dynamics and excludes clients whose availability
+    chain mixes too slowly (their importance-weighted reappearances inject
+    more variance/bias than their data is worth). No oracle probabilities:
+    everything is estimated in-state from the observed `active` masks.
+
+    Per-client state (all EWMA with rate `rho`):
+      pi_hat   — stationary activity estimate π̂_i (EWMA of the mask).
+      stay_up  — P(active_t | active_{t-1}) estimate (updated only on
+                 rounds where the client WAS active).
+      stay_dn  — P(inactive_t | inactive_{t-1}) estimate (updated only
+                 after inactive rounds); 1/(1−stay_dn) is the expected
+                 off-burst length, and stay_up + stay_dn − 1 estimates the
+                 second eigenvalue λ_i of the 2-state availability chain —
+                 Rodio et al.'s correlation measure.
+
+    Round update: exclude clients with stay_dn > d_max (expected off-burst
+    beyond 1/(1−d_max) rounds); the rest are importance-weighted by their
+    estimated rate,
+
+        w_{t+1} = w_t − η · Σ_{i incl} 1[i ∈ A(t)] u^i_t / π̂_i
+                          / |{incl}| ,
+
+    falling back to all-clients-included when the exclusion rule would
+    empty the cohort. Under iid availability the estimates converge to the
+    true p_i and CAFed approaches FedAvgIS without the oracle; under
+    correlated availability it trades the excluded clients' bias for
+    variance, which is exactly the regime split the scenario atlas probes.
+    Estimation needs the chain to BE estimable, hence
+    `assumes = 'stationary_mixing'`.
+    """
+
+    rho: float = 0.1
+    pi_min: float = 0.05
+    d_max: float = 0.85
+    assumes: ClassVar[str] = "stationary_mixing"
+
+    def init_state(self, params, n_clients: int) -> dict:
+        # neutral priors: π̂ at 1/2, both persistences at their iid-0.5
+        # values — a client never observed in a state keeps the prior
+        return {"pi_hat": jnp.full((n_clients,), 0.5, jnp.float32),
+                "stay_up": jnp.full((n_clients,), 0.5, jnp.float32),
+                "stay_dn": jnp.full((n_clients,), 0.5, jnp.float32),
+                "prev": jnp.ones((n_clients,), bool),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def round_step(self, state, params, updates, losses, active, eta,
+                   rng=None):
+        act = active.astype(jnp.float32)
+        rho = jnp.float32(self.rho)
+        pi_hat = state["pi_hat"] + rho * (act - state["pi_hat"])
+        stay_up = jnp.where(state["prev"],
+                            state["stay_up"]
+                            + rho * (act - state["stay_up"]),
+                            state["stay_up"])
+        stay_dn = jnp.where(state["prev"], state["stay_dn"],
+                            state["stay_dn"]
+                            + rho * ((1.0 - act) - state["stay_dn"]))
+        incl = (stay_dn <= self.d_max).astype(jnp.float32)
+        # never let the exclusion rule empty the cohort entirely
+        incl = jnp.where(jnp.sum(incl) > 0, incl, jnp.ones_like(incl))
+        w = incl * act / jnp.clip(pi_hat, self.pi_min, 1.0)
+        denom = jnp.maximum(jnp.sum(incl), 1.0)
+        mean_G = jax.tree.map(
+            lambda u: jnp.sum(u * _bcast(w, u), 0) / denom, updates)
+        new_params = jax.tree.map(lambda p, g: (p - eta * g).astype(p.dtype),
+                                  params, mean_G)
+        loss = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1.0)
+        new_state = {"pi_hat": pi_hat, "stay_up": stay_up,
+                     "stay_dn": stay_dn, "prev": active,
+                     "t": state["t"] + 1}
+        return new_state, new_params, {"loss": loss,
+                                       "n_active": jnp.sum(act)}
 
 
 @dataclass(frozen=True)
@@ -112,6 +295,7 @@ class FedAvgSampling:
     """FedAvg with device sampling: wait for the S selected devices."""
 
     s: int
+    assumes: ClassVar[str] = "none"
 
     def init_state(self, params, n_clients: int) -> dict:
         return {
@@ -181,6 +365,7 @@ class SCAFFOLDSampling:
 
     s: int
     k_steps: int
+    assumes: ClassVar[str] = "none"
 
     def init_state(self, params, n_clients: int) -> dict:
         zeros_n = lambda p: jnp.zeros((n_clients,) + p.shape, jnp.float32)

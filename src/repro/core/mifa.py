@@ -44,6 +44,9 @@ class MIFA:
 
     memory: str = "array"
     memory_dtype: str = "float32"
+    # needs no knowledge of the availability law (Assumption 4 only) —
+    # see docs/scenarios.md "Algorithm taxonomy"
+    assumes = "arbitrary"
 
     # ------------------------------------------------------------------ #
     def init_state(self, params, n_clients: int) -> dict:

@@ -16,6 +16,7 @@ two drivers can share it unchanged:
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -25,6 +26,31 @@ import numpy as np
 
 from repro.core.local_update import client_updates
 from repro.core.participation import TauStats
+
+_FALLBACK_WARNED: set[str] = set()
+
+
+def warn_engine_fallback(msg: str, *, stacklevel: int = 3) -> None:
+    """Emit an engine-fallback warning ONCE per distinct message.
+
+    Sweeps (the scenario atlas, fleet grids, repeated run_fl calls) hit the
+    same unsupported configuration hundreds of times; the first warning per
+    config is signal, the rest is noise — and `simplefilter("always")`
+    environments defeat the stdlib's own per-location dedup. The message
+    embeds the config-specific reason, so distinct configs still warn.
+    `stacklevel` defaults to 3: one frame for this helper plus the
+    stacklevel=2 the inline warnings used, so the warning still points at
+    the run_fl / run_fleet caller.
+    """
+    if msg in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(msg)
+    warnings.warn(msg, stacklevel=stacklevel)
+
+
+def _reset_fallback_warnings() -> None:
+    """Forget which fallback warnings fired (test isolation hook)."""
+    _FALLBACK_WARNED.clear()
 
 
 @dataclass
@@ -536,10 +562,10 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
                                     eval_every=eval_every, verbose=verbose)
             if engine == "scan_strict":
                 raise ValueError(f"engine='scan_strict': {why}")
-            import warnings
-            warnings.warn(f"engine='scan' unsupported for this simulated "
-                          f"configuration ({why}); falling back to the "
-                          "discrete-event heap engine", stacklevel=2)
+            warn_engine_fallback(
+                f"engine='scan' unsupported for this simulated "
+                f"configuration ({why}); falling back to the "
+                "discrete-event heap engine")
         part = participation if participation is not None \
             else runner.scen_process.host_sampler()
         eng = FedSimEngine(runner, sim.policy, part, sim.latency, sim.config,
@@ -561,10 +587,9 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
             return runner.finalize()
         if engine == "scan_strict":
             raise ValueError(f"engine='scan_strict': {why}")
-        import warnings
-        warnings.warn(f"engine='scan' unsupported for this configuration "
-                      f"({why}); falling back to the per-round loop",
-                      stacklevel=2)
+        warn_engine_fallback(
+            f"engine='scan' unsupported for this configuration "
+            f"({why}); falling back to the per-round loop")
     t0 = time.time()
     for t in range(n_rounds):
         if scenario is not None:

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core.runner import (FLHistory, _pow2_bucket, apply_mean,
                                make_cohort_update_fn, make_dense_round_fn,
-                               make_scenario_round_fn)
+                               make_scenario_round_fn, warn_engine_fallback)
 from repro.fleet.spec import FleetSpec, Trial
 
 
@@ -666,9 +666,9 @@ def run_fleet(*, model, batcher, schedule: Callable, n_rounds: int,
             return runner.finalize()
         if engine == "scan_strict":
             raise ValueError(f"engine='scan_strict': {why}")
-        import warnings
-        warnings.warn(f"engine='scan' unsupported for this fleet ({why}); "
-                      "falling back to the per-round loop", stacklevel=2)
+        warn_engine_fallback(
+            f"engine='scan' unsupported for this fleet ({why}); "
+            "falling back to the per-round loop")
     t0 = time.time()
     for t in range(n_rounds):
         if n_scen:

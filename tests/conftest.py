@@ -40,6 +40,16 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip)
 
 
+@pytest.fixture(autouse=True)
+def _fresh_fallback_warnings():
+    """Engine-fallback warnings dedupe once-per-config per process
+    (core.runner.warn_engine_fallback); tests asserting on them need each
+    test to start with a clean slate."""
+    from repro.core.runner import _reset_fallback_warnings
+    _reset_fallback_warnings()
+    yield
+
+
 # --------------------------------------------------------------------------- #
 # tiny-problem factories (session-scoped, memoised per shape)
 # --------------------------------------------------------------------------- #

@@ -1,9 +1,12 @@
-"""FedAvg-variant baselines (paper Algorithm 2)."""
+"""FedAvg-variant baselines (paper Algorithm 2) + competing fixes
+(FedAR, CA-Fed) from the related work."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import BiasedFedAvg, FedAvgIS, FedAvgSampling, SCAFFOLDSampling
+from repro.core import (MIFA, BiasedFedAvg, CAFed, FedAR, FedAvgIS,
+                        FedAvgSampling, SCAFFOLDSampling)
 
 N = 5
 
@@ -47,6 +50,184 @@ def test_is_unbiased_over_rounds():
                                       jnp.float32(1.0))
         total += -np.asarray(p_new["w"])
     np.testing.assert_allclose(total / T, [2.0], atol=0.1)  # mean(1,2,3)
+
+
+def test_is_zero_prob_client_is_excluded_finite():
+    """p_i = 0 must not produce inf/nan: the unguarded `act / p` division
+    used to poison params the moment a zero-prob client appeared active
+    (e.g. a scenario whose stationary rate underflows)."""
+    params = {"w": jnp.zeros((1,))}
+    algo = FedAvgIS((0.5, 0.0, 1.0))
+    state = algo.init_state(params, 3)
+    u = {"w": jnp.array([[1.0], [1.0], [1.0]])}
+    active = jnp.array([True, True, False])
+    _, p_new, m = algo.round_step(state, params, u, jnp.zeros(3), active,
+                                  jnp.float32(1.0))
+    assert np.all(np.isfinite(np.asarray(p_new["w"])))
+    assert np.isfinite(float(m["loss"]))
+    # the zero-prob client contributes weight 0, not inf: (1/0.5 + 0 + 0)/3
+    np.testing.assert_allclose(p_new["w"], [-2.0 / 3.0])
+
+
+def test_is_probs_live_in_state_not_statics():
+    """Regression: `probs` used to sit on the hashable dataclass as a jit
+    static, so every distinct probability vector retraced the round. The
+    fix moves them into the algorithm state pytree — one trace must serve
+    two different probs vectors (and still produce their different
+    outputs)."""
+    params = {"w": jnp.zeros((1,))}
+    u = {"w": jnp.array([[1.0], [1.0]])}
+    active = jnp.ones(2, bool)
+    traces = []
+
+    @jax.jit
+    def step(state, params):
+        traces.append(1)  # python side effect: runs once per trace
+        algo = FedAvgIS((1.0, 1.0))  # dummy probs; real ones ride `state`
+        return algo.round_step(state, params, u, jnp.zeros(2), active,
+                               jnp.float32(1.0))
+
+    s_half = FedAvgIS((0.5, 0.5)).init_state(params, 2)
+    s_quarter = FedAvgIS((0.25, 0.25)).init_state(params, 2)
+    _, p_half, _ = step(s_half, params)
+    _, p_quarter, _ = step(s_quarter, params)
+    assert len(traces) == 1, "distinct probs vectors must NOT retrace"
+    np.testing.assert_allclose(p_half["w"], [-2.0])
+    np.testing.assert_allclose(p_quarter["w"], [-4.0])
+
+
+def _one_round(algo, params, u, active, n):
+    state = algo.init_state(params, n)
+    return algo.round_step(state, params, u, jnp.zeros(n),
+                           jnp.asarray(active), jnp.float32(1.0))
+
+
+def test_fedar_decay_one_equals_mifa():
+    """decay=1 keeps every surrogate at full weight — exactly MIFA."""
+    params = {"w": jnp.zeros((2,))}
+    u = {"w": jnp.array([[3.0, 3.0], [1.0, 1.0], [2.0, 2.0]])}
+    active = [True, False, True]
+    _, p_ar, _ = _one_round(FedAR(decay=1.0), params, u, active, 3)
+    _, p_mifa, _ = _one_round(MIFA(), params, u, active, 3)
+    # Σα·U/Σα vs MIFA's Σ(U/n): same mean up to fp association order
+    np.testing.assert_allclose(np.asarray(p_ar["w"]),
+                               np.asarray(p_mifa["w"]), rtol=1e-6)
+
+
+def test_fedar_decay_zero_equals_biased_fedavg():
+    """decay=0 zeroes every stale surrogate — exactly active-mean FedAvg
+    (up to the denominator: α sums to the active count)."""
+    params = {"w": jnp.zeros((2,))}
+    u = {"w": jnp.array([[3.0, 3.0], [1.0, 1.0], [100.0, 100.0]])}
+    active = [True, True, False]
+    _, p_ar, _ = _one_round(FedAR(decay=0.0), params, u, active, 3)
+    _, p_avg, _ = _one_round(BiasedFedAvg(), params, u, active, 3)
+    np.testing.assert_allclose(np.asarray(p_ar["w"]), np.asarray(p_avg["w"]))
+
+
+def test_fedar_rectification_discounts_staleness():
+    """A surrogate unrefreshed for τ rounds enters the average with weight
+    decay**τ, and α re-normalises the mean."""
+    decay = 0.5
+    algo = FedAR(decay=decay)
+    params = {"w": jnp.zeros((1,))}
+    state = algo.init_state(params, 2)
+    u1 = {"w": jnp.array([[1.0], [5.0]])}
+    # round 0: both active -> surrogates {1, 5}, τ = {0, 0}
+    state, params, _ = algo.round_step(state, params, u1, jnp.zeros(2),
+                                       jnp.ones(2, bool), jnp.float32(0.0))
+    # rounds 1..2: client 1 inactive -> its τ grows to 2
+    u2 = {"w": jnp.array([[1.0], [999.0]])}  # 999 must be masked out
+    for _ in range(2):
+        state, params, _ = algo.round_step(
+            state, params, u2, jnp.zeros(2),
+            jnp.array([True, False]), jnp.float32(0.0))
+    assert state["tau"].tolist() == [0, 2]
+    # η=1 step: client 1 misses a third round (τ -> 3 inside the step),
+    # so g = (1·1 + 0.125·5) / (1 + 0.125)
+    state, p_new, _ = algo.round_step(state, params, u2, jnp.zeros(2),
+                                      jnp.array([True, False]),
+                                      jnp.float32(1.0))
+    want = (1.0 * 1.0 + decay**3 * 5.0) / (1.0 + decay**3)
+    np.testing.assert_allclose(np.asarray(p_new["w"]), [-want], rtol=1e-6)
+
+
+def test_cafed_estimates_converge_to_chain_stats():
+    """The EWMA trackers recover (π, P(act|act), P(inact|inact)) of the
+    availability process. A deterministic periodic pattern keeps the test
+    exact: [1,1,1,0,0] repeating has π = 0.6, P(act|act) = 2/3,
+    P(inact|inact) = 1/2, and a small-ρ EWMA settles into a tight orbit
+    around those values."""
+    pattern = [True, True, True, False, False]
+    algo = CAFed(rho=0.05)
+    params = {"w": jnp.zeros((1,))}
+    state = algo.init_state(params, 1)
+    u = {"w": jnp.zeros((1, 1))}
+    for t in range(600):
+        state, params, _ = algo.round_step(
+            state, params, u, jnp.zeros(1),
+            jnp.array([pattern[t % 5]]), jnp.float32(0.0))
+    assert abs(float(state["pi_hat"][0]) - 0.6) < 0.15
+    assert abs(float(state["stay_up"][0]) - 2 / 3) < 0.15
+    assert abs(float(state["stay_dn"][0]) - 1 / 2) < 0.15
+
+
+def test_cafed_excludes_long_burst_clients():
+    """A client whose inactive bursts are long (stay_dn > d_max) is
+    excluded from the average once its estimate crosses the threshold."""
+    algo = CAFed(rho=0.1, d_max=0.8)
+    params = {"w": jnp.zeros((1,))}
+    state = algo.init_state(params, 2)
+    u = {"w": jnp.array([[1.0], [50.0]])}
+    # client 1 flaps off after round 0 and stays dark -> stay_dn -> 1
+    state, params, _ = algo.round_step(state, params, u, jnp.zeros(2),
+                                       jnp.ones(2, bool), jnp.float32(0.0))
+    for _ in range(20):
+        state, params, _ = algo.round_step(
+            state, params, u, jnp.zeros(2),
+            jnp.array([True, False]), jnp.float32(0.0))
+    assert float(state["stay_dn"][1]) > 0.9
+    # client 1 reappears for one round: an i.i.d.-style IS correction
+    # would up-weight it by 1/π; CA-Fed excludes it instead
+    state, p_new, _ = algo.round_step(state, params, u, jnp.zeros(2),
+                                      jnp.ones(2, bool), jnp.float32(1.0))
+    w0 = float(np.asarray(p_new["w"])[0])
+    # only client 0's update (weight 1/π̂₀ ≈ 1) enters; 50 never does
+    assert -3.0 < w0 < 0.0
+
+
+def test_cafed_all_excluded_falls_back_to_everyone():
+    """If the threshold would empty the cohort, CA-Fed must include
+    everyone rather than freeze the model on a zero denominator."""
+    algo = CAFed(rho=1.0, d_max=0.0)  # instant estimates, exclude on any
+    params = {"w": jnp.zeros((1,))}
+    state = algo.init_state(params, 2)
+    u = {"w": jnp.array([[1.0], [1.0]])}
+    # one all-dark round drives every stay_dn above d_max=0
+    state, params, _ = algo.round_step(state, params, u, jnp.zeros(2),
+                                       jnp.zeros(2, bool), jnp.float32(1.0))
+    state, p_new, m = algo.round_step(state, params, u, jnp.zeros(2),
+                                      jnp.ones(2, bool), jnp.float32(1.0))
+    assert np.all(np.isfinite(np.asarray(p_new["w"])))
+    assert float(np.asarray(p_new["w"])[0]) < 0.0  # the step still moved
+
+
+@pytest.mark.parametrize("algo_fn", [
+    lambda: FedAR(decay=0.5), lambda: CAFed()], ids=["fedar", "cafed"])
+def test_new_baselines_are_scan_compatible_pure_fns(algo_fn):
+    """round_step must be jit-pure with a fixed state structure: same
+    treedef/shapes/dtypes out as in (the scan-carry contract)."""
+    algo = algo_fn()
+    params = {"w": jnp.zeros((3,))}
+    state = algo.init_state(params, 4)
+    u = {"w": jnp.ones((4, 3))}
+    stepped = jax.jit(algo.round_step)(state, params, u, jnp.zeros(4),
+                                       jnp.ones(4, bool), jnp.float32(0.1))
+    new_state, new_params, metrics = stepped
+    assert (jax.tree.structure(new_state) == jax.tree.structure(state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(new_state)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert set(metrics) >= {"loss", "n_active"}
 
 
 def test_sampling_waits_for_cohort():

@@ -104,8 +104,12 @@ def test_real_baseline_catches_scan_engine_regression(tmp_path):
     artifacts = {}
     for spec in baseline["metrics"].values():
         art = artifacts.setdefault(spec["artifact"], {})
-        healthy = spec["value"] if "value" in spec else \
-            spec.get("min", 0.0) + 1.0
+        if "value" in spec:
+            healthy = spec["value"]
+        elif "min" in spec and "max" in spec:  # band pin: sit at the middle
+            healthy = (spec["min"] + spec["max"]) / 2
+        else:
+            healthy = spec.get("min", 0.0) + 1.0
         parts = spec["path"].split(".")
         cur = art
         for a, b in zip(parts[:-1], parts[1:]):
