@@ -107,9 +107,15 @@ class DenseBank(MemoryBank):
 
     # ------------------------------------------------------------------ #
     def _pallas(self) -> bool:
+        from repro.kernels.backend import (interpret_default,
+                                           pallas_partition_safe)
+        # a pallas_call is a single-device program with no SPMD partitioning
+        # rule — under a >1-device mesh the jnp scatter bodies (which lower
+        # to collectives) are the only safe path, even when forced
+        if not pallas_partition_safe(self.mesh):
+            return False
         if self._use_pallas is not None:
             return self._use_pallas
-        from repro.kernels.backend import interpret_default
         # interpret-mode Pallas is orders of magnitude slower than jnp on
         # CPU; only take the kernel path when it would actually compile.
         return not interpret_default()

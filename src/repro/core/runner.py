@@ -53,6 +53,28 @@ def _reset_fallback_warnings() -> None:
     _FALLBACK_WARNED.clear()
 
 
+def warn_legacy_threefry(mesh) -> None:
+    """Warn once when a >1-device mesh runs under the legacy threefry RNG.
+
+    JAX's default (non-partitionable) threefry lowering generates DIFFERENT
+    random bits when its operands are sharded — a `jax.random.uniform`
+    inside the round function draws different values on a 2x2 mesh than on
+    one device, so jit-native scenario masks and any in-program randomness
+    silently depend on the mesh shape. `jax_threefry_partitionable=True`
+    makes the bits sharding-invariant (at the cost of differing from the
+    legacy single-device stream). The mesh test/benchmark worlds set it
+    (tests/conftest.py, docs/architecture.md §13).
+    """
+    n = getattr(mesh, "size", 1)
+    if n <= 1 or getattr(jax.config, "jax_threefry_partitionable", True):
+        return
+    warn_engine_fallback(
+        "mesh= with the legacy threefry RNG: in-program random draws "
+        "(jit-native scenario masks, algorithm rng) depend on the mesh "
+        "shape; set jax.config.update('jax_threefry_partitionable', True) "
+        "for sharding-invariant trajectories")
+
+
 @dataclass
 class FLHistory:
     rounds: list = field(default_factory=list)
@@ -496,7 +518,7 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
            cohort_capacity: int | None = None, engine: str = "loop",
-           scan_chunk: int = 64,
+           scan_chunk: int = 64, mesh=None, cfg=None,
            verbose: bool = False) -> tuple[Any, FLHistory]:
     """Run T round-synchronous rounds of federated training.
 
@@ -540,12 +562,40 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
         (update-clock schedules, host-offloaded banks) fall back to the
         loop with a warning.
       * "scan_strict" — like "scan" but unsupported configurations raise.
+
+    `mesh` (scan engines only) places the scan carry under explicit
+    shardings (`sharding.rules.scan_carry_specs`): params by the model
+    rules when `cfg` (an `ArchConfig`) is given, MIFA's update array /
+    bank rows / scenario chain state with the client axis over the mesh's
+    data axes — one compiled program, data-parallel over clients and
+    model-parallel over d (docs/architecture.md §13). A `DenseBank`
+    constructed without its own mesh inherits `mesh`/`cfg` so its rows
+    pad to divide the data extent (`sharding.rules.padded_bank_rows`).
+    Sharded client-axis reductions group partial sums per device, so
+    trajectories match single-device runs to fp32 reduction-order
+    tolerance, not bitwise (tests/test_sharded_scan.py pins both).
     """
     if (participation is None) == (scenario is None):
         raise ValueError("pass exactly one of participation= or scenario=")
     if engine not in ("loop", "scan", "scan_strict"):
         raise ValueError(f"unknown engine {engine!r}: expected 'loop', "
                          "'scan', or 'scan_strict'")
+    if mesh is not None:
+        if engine == "loop":
+            raise ValueError("mesh= places the scan carry; it has no effect "
+                             "under engine='loop' — pass engine='scan'")
+        if sim is not None:
+            raise ValueError("mesh= is not supported for simulated runs "
+                             "(the compiled simulator carry has no "
+                             "sharding rules yet)")
+        warn_legacy_threefry(mesh)
+        # banks build their rows inside RoundRunner.__init__ (algo.init_state
+        # -> bank.init), so a mesh-less bank inherits the run's mesh here
+        bank = getattr(algo, "bank", None)
+        if (bank is not None and hasattr(bank, "mesh")
+                and bank.mesh is None):
+            bank.mesh = mesh
+            bank.cfg = cfg if getattr(bank, "cfg", None) is None else bank.cfg
     runner = RoundRunner(model=model, algo=algo, batcher=batcher,
                          schedule=schedule, eta_local=eta_local,
                          weight_decay=weight_decay, seed=seed, params=params,
@@ -580,13 +630,18 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
         ok, why = scan_supported(runner)
         if ok:
             t0 = time.time()
-            ScanDriver(runner, scan_chunk=scan_chunk).run(
+            ScanDriver(runner, scan_chunk=scan_chunk, mesh=mesh,
+                       cfg=cfg).run(
                 n_rounds, participation=participation, eval_fn=eval_fn,
                 eval_every=eval_every, verbose=verbose)
             runner.hist.wall_time = time.time() - t0
             return runner.finalize()
         if engine == "scan_strict":
             raise ValueError(f"engine='scan_strict': {why}")
+        if mesh is not None:
+            raise ValueError(f"engine='scan' with mesh= cannot fall back "
+                             f"to the per-round loop (the loop ignores "
+                             f"mesh); blocker: {why}")
         warn_engine_fallback(
             f"engine='scan' unsupported for this configuration "
             f"({why}); falling back to the per-round loop")

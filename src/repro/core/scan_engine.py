@@ -173,11 +173,18 @@ class ScanDriver:
     written back, and `runner.finalize()` works unchanged.
     """
 
-    def __init__(self, runner: RoundRunner, *, scan_chunk: int = 64):
+    def __init__(self, runner: RoundRunner, *, scan_chunk: int = 64,
+                 mesh=None, cfg=None):
         if scan_chunk < 1:
             raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
         self.r = runner
         self.scan_chunk = scan_chunk
+        self.mesh = mesh
+        self.cfg = cfg
+        # NamedSharding tree matching the carry, set by `_init_carry`
+        # (which runs before the first `_chunk_fn` trace — the closure
+        # below reads it at trace time, not at definition time)
+        self._carry_shardings = None
         r = runner
         self.scenario_mode = (r.scen_process is not None
                               and not r.cohort_mode)
@@ -186,6 +193,17 @@ class ScanDriver:
             r.model, r.algo, r.batcher.k_steps, r.weight_decay,
             scen_fn=scen_fn, cohort=r.cohort_mode,
             track_tau=self.scenario_mode)
+        if mesh is not None:
+            # re-pin the carry's placement after every round: without the
+            # constraint XLA is free to resharded intermediates, and the
+            # donated carry must keep one layout across chunk boundaries
+            inner = body
+
+            def body(carry, x):
+                carry, ys = inner(carry, x)
+                return (jax.lax.with_sharding_constraint(
+                    carry, self._carry_shardings), ys)
+
         self._chunk_fn = jax.jit(
             lambda carry, xs: jax.lax.scan(body, carry, xs),
             donate_argnums=(0,))
@@ -213,7 +231,25 @@ class ScanDriver:
             carry["tau"] = jnp.asarray(r.stats.tau, jnp.int32)
             carry["tau_max"] = jnp.asarray(r.stats.tau_max_per_dev,
                                            jnp.int32)
+        if self.mesh is not None:
+            carry = self._shard_carry(carry)
         return carry
+
+    def _shard_carry(self, carry: dict) -> dict:
+        """Place the initial carry under `sharding.rules.scan_carry_specs`
+        and remember the shardings — the scan body re-pins them every
+        round via `with_sharding_constraint`."""
+        from jax.sharding import NamedSharding
+        from repro.sharding.rules import scan_carry_specs
+        bank = getattr(self.r.algo, "bank", None)
+        rows = getattr(bank, "n_rows", 0)
+        specs = scan_carry_specs(carry, self.mesh, cfg=self.cfg,
+                                 n_clients=self.r.n_clients,
+                                 row_counts=(rows,) if rows else ())
+        self._carry_shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+        return jax.tree.map(jax.device_put, carry, self._carry_shardings)
 
     def _writeback(self, carry: dict) -> None:
         r = self.r

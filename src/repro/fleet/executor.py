@@ -202,6 +202,8 @@ class FleetRunner:
                 donate_argnums=(0,))
             self.cohort_round_fn = None
 
+        self.mesh = mesh
+        self.cfg = cfg
         self._init_scenarios(scenarios, weight_decay)
         if mesh is not None:
             self._shard_trial_axis(mesh, cfg)
@@ -248,8 +250,14 @@ class FleetRunner:
         self.scen_keys = jnp.stack([p.key for p in procs])
 
     def _shard_trial_axis(self, mesh, cfg) -> None:
+        """Place every (K, ...)-leading trial structure — params, algorithm
+        state, per-trial RNG streams, and (scenario fleets) the stacked
+        chain state and scenario keys — with the trial axis over the mesh's
+        data axes, so the vmapped/scanned programs run K-way data parallel."""
         from jax.sharding import NamedSharding
+        from repro.core.runner import warn_legacy_threefry
         from repro.sharding.rules import fleet_axis_specs, fleet_trial_specs
+        warn_legacy_threefry(mesh)
         put = lambda tree, specs: jax.tree.map(
             lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
             tree, specs)
@@ -260,6 +268,12 @@ class FleetRunner:
             self.params = put(self.params,
                               fleet_axis_specs(self.params, mesh))
         self.state = put(self.state, fleet_axis_specs(self.state, mesh))
+        self.rngs = put(self.rngs, fleet_axis_specs(self.rngs, mesh))
+        if getattr(self, "scen_round_fn", None) is not None:
+            self.scen_state = put(self.scen_state,
+                                  fleet_axis_specs(self.scen_state, mesh))
+            self.scen_keys = put(self.scen_keys,
+                                 fleet_axis_specs(self.scen_keys, mesh))
 
     # ------------------------------------------------------------------ #
     def _split(self):
@@ -449,6 +463,19 @@ class FleetScanDriver:
             xs_axes = {"batch": None, "active": 0, "eta_loc": 0,
                        "eta_srv": 0}
         vbody = jax.vmap(body, in_axes=(0, xs_axes))
+        # NamedSharding tree matching the carry, set by `_init_carry`
+        # before the first `_chunk_fn` trace reads it
+        self._carry_shardings = None
+        if getattr(r, "mesh", None) is not None:
+            # pin the trial-axis placement after every vmapped round, so
+            # the donated carry keeps one layout across chunk boundaries
+            inner = vbody
+
+            def vbody(carry, x):
+                carry, ys = inner(carry, x)
+                return (jax.lax.with_sharding_constraint(
+                    carry, self._carry_shardings), ys)
+
         self._chunk_fn = jax.jit(
             lambda carry, xs: jax.lax.scan(vbody, carry, xs),
             donate_argnums=(0,))
@@ -463,6 +490,15 @@ class FleetScanDriver:
         if self.scenario_mode:
             carry["scen_state"] = r.scen_state
             carry["scen_key"] = r.scen_keys
+        if getattr(r, "mesh", None) is not None:
+            from jax.sharding import NamedSharding
+            from repro.sharding.rules import fleet_carry_specs
+            specs = fleet_carry_specs(carry, r.mesh, cfg=r.cfg)
+            self._carry_shardings = jax.tree.map(
+                lambda s: NamedSharding(r.mesh, s), specs,
+                is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+            carry = jax.tree.map(jax.device_put, carry,
+                                 self._carry_shardings)
         return carry
 
     def _writeback(self, carry: dict) -> None:

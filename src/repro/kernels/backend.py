@@ -38,3 +38,28 @@ def interpret_default() -> bool:
 
 def resolve_interpret(interpret: bool | None) -> bool:
     return interpret_default() if interpret is None else bool(interpret)
+
+
+def pallas_partition_safe(mesh) -> bool:
+    """May a pallas_call run under callers sharded over `mesh`?
+
+    A pallas_call — compiled Mosaic or interpret mode alike — is a
+    single-device program: it has no SPMD partitioning rule, so tracing one
+    inside a jit whose operands are sharded over a >1-device mesh either
+    fails to lower or silently gathers the full operand onto every device.
+    The pure-jnp scatter bodies, by contrast, partition fine (gather /
+    `.at[ids].set` lower to collectives). Callers that hold a mesh
+    (e.g. `bank.DenseBank`) consult this before choosing the kernel path
+    and fall back to jnp when it returns False.
+
+    `mesh` may be None (no mesh: safe), a concrete `jax.sharding.Mesh`, or
+    an `AbstractMesh` — anything exposing `.size` or a `.shape` mapping.
+    """
+    if mesh is None:
+        return True
+    n = getattr(mesh, "size", None)
+    if n is None:
+        n = 1
+        for extent in dict(mesh.shape).values():
+            n *= extent
+    return n <= 1

@@ -14,12 +14,34 @@ from __future__ import annotations
 import jax
 
 
+def _validate_axes(shape: tuple, axes: tuple) -> None:
+    """Reject malformed mesh requests up front, naming the bad axis.
+
+    JAX itself accepts duplicate axis names in AbstractMesh (the second
+    silently shadows the first in `mesh.shape`) and lets non-positive
+    sizes surface later as opaque reshape errors — both have bitten the
+    sharding rules, which key on axis names and divide by axis sizes.
+    """
+    if len(shape) != len(axes):
+        raise ValueError(f"mesh shape {shape} and axes {axes} differ "
+                         "in length")
+    seen = set()
+    for name, size in zip(axes, shape):
+        if name in seen:
+            raise ValueError(f"duplicate mesh axis name {name!r} in {axes}")
+        seen.add(name)
+        if not isinstance(size, int) or size < 1:
+            raise ValueError(f"mesh axis {name!r} has non-positive size "
+                             f"{size!r}; every axis needs an int >= 1")
+
+
 def make_abstract_mesh(shape: tuple, axes: tuple):
     """AbstractMesh across JAX versions.
 
     Newer JAX takes one shape_tuple of (name, size) pairs; older releases
     took positional (axis_shapes, axis_names).
     """
+    _validate_axes(shape, axes)
     from jax.sharding import AbstractMesh
     try:
         return AbstractMesh(tuple(zip(axes, shape)))
@@ -28,6 +50,7 @@ def make_abstract_mesh(shape: tuple, axes: tuple):
 
 
 def _make_mesh(shape: tuple, axes: tuple, devices=None):
+    _validate_axes(shape, axes)
     kwargs = {} if devices is None else {"devices": devices}
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
@@ -63,7 +86,13 @@ def data_parallel_size(mesh) -> int:
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / local runs)."""
+    """Small ("data", "model") mesh over whatever devices exist (tests /
+    local runs / the forced-host-device worlds of tests/conftest.py)."""
     n = len(jax.devices())
-    assert data * model <= n, (data, model, n)
+    if data * model > n:
+        raise ValueError(
+            f"make_host_mesh({data}, {model}) needs {data * model} devices "
+            f"but this process has {n}; force more host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=... before "
+            "JAX initialises (see tests/conftest.py)")
     return _make_mesh((data, model), ("data", "model"))

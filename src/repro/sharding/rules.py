@@ -105,14 +105,22 @@ def _axis_size(mesh, entry) -> int:
 
 
 def sanitize(spec: tuple, shape: tuple, mesh) -> tuple:
-    """Drop sharding on dims the mesh axis size does not divide.
+    """Drop sharding on dims the mesh axis size does not divide — and on
+    entries naming an axis this mesh does not have (a multi-pod spec reused
+    on a single-pod mesh replicates those dims instead of raising).
 
     Production note: frameworks usually *pad* indivisible dims (e.g. granite's
     vocab 49155 -> 49168) instead; we keep exact assigned shapes and replicate
     those dims, recording the memory cost in §Roofline.
     """
+    names = set(mesh.axis_names)
     out = []
     for dim, entry in zip(shape, spec):
+        axes = (tuple(entry) if isinstance(entry, (tuple, list))
+                else (entry,)) if entry is not None else ()
+        if any(a not in names for a in axes):
+            out.append(None)
+            continue
         n = _axis_size(mesh, entry)
         out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
     return tuple(out)
@@ -244,14 +252,79 @@ def fleet_axis_specs(stacked_state: Any, mesh) -> Any:
     """Generic trial-axis specs for opaque fleet state (algorithm state,
     memory-bank rows, RNG keys): axis 0 over data/pod, the rest replicated.
     Use `fleet_trial_specs` for parameters, where trailing dims can keep
-    their model sharding."""
+    their model sharding. Scalar leaves (per-fleet counters) replicate."""
     dax = data_axes(mesh)
 
     def fn(leaf):
+        if leaf.ndim == 0:
+            return P()
         full = (dax,) + (None,) * (leaf.ndim - 1)
         return P(*sanitize(full, tuple(leaf.shape), mesh))
 
     return jax.tree.map(fn, stacked_state)
+
+
+def scan_carry_specs(carry: dict, mesh, *, cfg: ArchConfig | None = None,
+                     n_clients: int = 0, row_counts: tuple = ()) -> dict:
+    """PartitionSpecs for the whole-run scan carry (`core.scan_engine`).
+
+    The carry is ``{"state", "params", "rng"}`` plus the scenario keys
+    ``{"scen_state", "scen_key"}`` and the τ accumulators ``{"tau",
+    "tau_max"}``. Placement:
+
+      * ``params`` — `param_specs` when `cfg` is given (model/fsdp rules);
+        replicated otherwise (the tiny paper models replicate anyway).
+      * client-indexed state — any leaf whose leading dim is `n_clients`,
+        `n_clients + 1` (dense bank rows incl. the dummy row) or one of
+        `row_counts` (padded bank rows) shards axis 0 over the mesh's
+        data (and pod) axes: MIFA's update array, bank rows, per-client
+        quantisation scales, scenario chain state, and the τ vectors.
+      * everything else (RNG keys, scalars, running sums Ḡ/g_sum) —
+        replicated. g_sum stays replicated deliberately: it is the result
+        of a client-axis reduction, so XLA all-reduces partial sums into
+        every shard.
+
+    Indivisible client axes fall back to replication via `sanitize` —
+    sharded runs want N a multiple of `data_axis_size(mesh)` (banks pad
+    via `padded_bank_rows`).
+    """
+    dax = data_axes(mesh)
+    rows = {n_clients, n_clients + 1, *row_counts} - {0, 1}
+
+    def client_leaf(leaf):
+        if leaf.ndim and leaf.shape[0] in rows:
+            full = (dax,) + (None,) * (leaf.ndim - 1)
+            return P(*sanitize(full, tuple(leaf.shape), mesh))
+        return P()
+
+    def replicated(tree):
+        return jax.tree.map(lambda _: P(), tree)
+
+    out = {}
+    for key, sub in carry.items():
+        if key == "params":
+            out[key] = (param_specs(sub, cfg, mesh) if cfg is not None
+                        else replicated(sub))
+        elif key in ("rng", "scen_key"):
+            out[key] = replicated(sub)
+        else:   # state / scen_state / tau / tau_max
+            out[key] = jax.tree.map(client_leaf, sub)
+    return out
+
+
+def fleet_carry_specs(carry: dict, mesh, *,
+                      cfg: ArchConfig | None = None) -> dict:
+    """PartitionSpecs for the fleet scan carry: every leaf carries a
+    leading (K,) trial axis, so the trial axis shards over data/pod
+    (`fleet_axis_specs`); stacked params keep their model-dim rules via
+    `fleet_trial_specs` when `cfg` is given."""
+    out = {}
+    for key, sub in carry.items():
+        if key == "params" and cfg is not None:
+            out[key] = fleet_trial_specs(sub, cfg, mesh)
+        else:
+            out[key] = fleet_axis_specs(sub, mesh)
+    return out
 
 
 def cache_specs(cache: Any, cfg: ArchConfig, mesh, batch_size: int) -> Any:

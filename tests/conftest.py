@@ -1,10 +1,36 @@
 """Shared test scaffolding: import path, device pinning, tiny-problem
-fixtures, and the `slow` marker.
+fixtures, and the `slow` / `mesh8` markers.
 
 Tier-1 (`pytest -x -q`) deselects tests marked `@pytest.mark.slow`; run
 them with `--runslow`. The session-scoped factories below memoise the
 small synthetic FL problems that used to be copy-pasted per test file —
 one construction per distinct shape, shared by every test that asks.
+
+Multi-device tests (the `mesh8` marker)
+---------------------------------------
+XLA only honours `--xla_force_host_platform_device_count` if it is set
+before the backend initialises, so a multi-device world cannot be opened
+inside an already-running pytest process — it must be a SUBPROCESS, the
+same mechanism `launch/dryrun.py` uses for its 512-device world. The
+pattern:
+
+  * tests that need 8 host devices carry `@pytest.mark.mesh8` and take the
+    `mesh8_world` fixture (which builds meshes via
+    `launch.mesh.make_host_mesh` and skips cleanly if JAX initialised
+    before the flag landed);
+  * in a normal tier-1 run (`REPRO_MESH8_WORLD` unset) those tests are
+    skipped at collection, and the un-marked proxy
+    `tests/test_sharded_scan.py::test_mesh8_subprocess_suite` spawns
+    `pytest -m mesh8` in a subprocess with the forced-device environment —
+    so tier-1 still exercises the whole multi-device suite, one world per
+    run;
+  * CI's mesh-smoke step runs `pytest -m mesh8` directly with the same
+    environment (see .github/workflows/ci.yml).
+
+The world also sets `JAX_THREEFRY_PARTITIONABLE=1`: the legacy threefry
+lowering generates different random bits when operands are sharded, so
+sharded-vs-single parity is only well-defined under the partitionable
+implementation (docs/architecture.md §13).
 """
 import functools
 import os
@@ -16,6 +42,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Smoke tests and benches must see exactly ONE device (the dry-run sets its own
 # XLA_FLAGS in a subprocess); keep CPU determinism.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+MESH8_WORLD_ENV = "REPRO_MESH8_WORLD"
+MESH8_ENV = {
+    MESH8_WORLD_ENV: "1",
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+    "JAX_PLATFORMS": "cpu",
+    "JAX_THREEFRY_PARTITIONABLE": "1",
+}
+
+if os.environ.get(MESH8_WORLD_ENV):
+    # belt-and-braces for a hand-launched world: conftest imports before
+    # the test modules touch JAX, so these still land in time unless a
+    # plugin initialised the backend first (mesh8_world skips then)
+    for _k, _v in MESH8_ENV.items():
+        os.environ.setdefault(_k, _v)
 
 import pytest  # noqa: E402
 
@@ -29,15 +70,41 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slow: heavy test, deselected from tier-1 (enable with --runslow)")
+    config.addinivalue_line(
+        "markers",
+        "mesh8: needs 8 forced host devices; runs inside the subprocess "
+        "world (REPRO_MESH8_WORLD=1 + XLA_FLAGS, see conftest docstring)")
 
 
 def pytest_collection_modifyitems(config, items):
+    if not os.environ.get(MESH8_WORLD_ENV):
+        skip8 = pytest.mark.skip(
+            reason="mesh8: runs in the forced-8-device subprocess world "
+                   "(driven by test_sharded_scan.py::"
+                   "test_mesh8_subprocess_suite)")
+        for item in items:
+            if "mesh8" in item.keywords:
+                item.add_marker(skip8)
     if config.getoption("--runslow"):
         return
     skip = pytest.mark.skip(reason="slow: tier-1 deselects (--runslow)")
     for item in items:
         if "slow" in item.keywords:
             item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def mesh8_world():
+    """Gate for `mesh8` tests: asserts this process actually has the 8
+    forced host devices, skipping cleanly when JAX initialised before
+    XLA_FLAGS could land (e.g. an eager plugin in a hand-launched world)."""
+    import jax
+    n = len(jax.devices())
+    if n < 8:
+        pytest.skip(f"mesh8 world has only {n} device(s): JAX initialised "
+                    "before --xla_force_host_platform_device_count took "
+                    "effect")
+    return n
 
 
 @pytest.fixture(autouse=True)

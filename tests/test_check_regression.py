@@ -108,6 +108,8 @@ def test_real_baseline_catches_scan_engine_regression(tmp_path):
             healthy = spec["value"]
         elif "min" in spec and "max" in spec:  # band pin: sit at the middle
             healthy = (spec["min"] + spec["max"]) / 2
+        elif "max" in spec:                    # cap-only pin: sit below it
+            healthy = spec["max"] / 2
         else:
             healthy = spec.get("min", 0.0) + 1.0
         parts = spec["path"].split(".")

@@ -158,3 +158,135 @@ def test_fleet_axis_specs_generic_state():
     assert tuple(specs["G"])[0] in ("data", ("data",))
     assert all(e is None for e in tuple(specs["G"])[1:])
     assert all(e is None for e in tuple(specs["odd"]))
+
+
+# --------------------------------------------------------------------------- #
+# mesh-construction validation (launch/mesh.py)
+# --------------------------------------------------------------------------- #
+
+def test_mesh_rejects_duplicate_axis_names():
+    """JAX's AbstractMesh silently shadows the first of two same-named axes
+    in `.shape`; the builders must refuse, naming the duplicated axis."""
+    with pytest.raises(ValueError, match=r"duplicate mesh axis name 'data'"):
+        make_abstract_mesh((4, 4), ("data", "data"))
+
+
+@pytest.mark.parametrize("bad", [0, -2, 3.0])
+def test_mesh_rejects_non_positive_or_non_int_sizes(bad):
+    with pytest.raises(ValueError, match=r"axis 'model'.*non-positive"):
+        make_abstract_mesh((4, bad), ("data", "model"))
+
+
+def test_mesh_rejects_shape_axes_length_mismatch():
+    with pytest.raises(ValueError, match="differ"):
+        make_abstract_mesh((4, 4, 2), ("data", "model"))
+
+
+def test_make_host_mesh_validates():
+    """Concrete builders share the same validation; an over-device request
+    names the XLA_FLAGS remedy instead of an opaque assert."""
+    from repro.launch.mesh import make_host_mesh
+    with pytest.raises(ValueError, match="duplicate mesh axis name"):
+        from repro.launch.mesh import _make_mesh
+        _make_mesh((1, 1), ("data", "data"))
+    n = len(jax.devices())
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_host_mesh(n + 1, 1)
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis properties: sanitize / padded_bank_rows / fleet_axis_specs
+# (CI installs requirements-dev.txt; containers without hypothesis keep the
+# deterministic tests above)
+# --------------------------------------------------------------------------- #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # tier-1 containers without dev extras
+    HAVE_HYPOTHESIS = False
+
+
+def _entry_axes(entry):
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
+
+
+if HAVE_HYPOTHESIS:
+    _MESHES = [make_abstract_mesh((2, 2), ("data", "model")),
+               make_abstract_mesh((16, 16), ("data", "model")),
+               make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))]
+    _ENTRIES = [None, "data", "model", "pod", ("data", "model"),
+                ("pod", "data"), ("pod", "data", "model")]
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.sampled_from(_MESHES),
+           st.lists(st.tuples(st.sampled_from(_ENTRIES),
+                              st.integers(1, 4096)),
+                    min_size=1, max_size=4))
+    def test_sanitize_properties(mesh, dims):
+        """sanitize never emits an axis absent from the mesh, every kept
+        entry divides its dim evenly, dropped entries become None
+        (shape-preserving), and the result is a fixed point (idempotence)."""
+        spec = tuple(e for e, _ in dims)
+        shape = tuple(d for _, d in dims)
+        out = rules.sanitize(spec, shape, mesh)
+        assert len(out) == len(shape)
+        for dim, entry in zip(shape, out):
+            if entry is None:
+                continue
+            axes = _entry_axes(entry)
+            assert axes and all(ax in mesh.axis_names for ax in axes)
+            assert dim % rules._axis_size(mesh, entry) == 0
+        assert rules.sanitize(out, shape, mesh) == out
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.sampled_from(_MESHES), st.integers(1, 10**6))
+    def test_padded_bank_rows_properties(mesh, n_clients):
+        """Padded row count always (a) fits N real rows + the dummy row,
+        (b) divides the mesh's data extent exactly (so `sanitize` never
+        silently replicates the bank), and (c) is minimal — one fewer
+        data-extent multiple could not hold N+1 rows."""
+        d = rules.data_axis_size(mesh)
+        rows = rules.padded_bank_rows(n_clients, mesh)
+        assert rows >= n_clients + 1
+        assert rows % d == 0
+        assert rows - d < n_clients + 1
+
+    _leaf = st.lists(st.integers(1, 48), min_size=0, max_size=3).map(
+        lambda s: jax.ShapeDtypeStruct(tuple(s), jnp.float32))
+    _tree = st.recursive(
+        _leaf,
+        lambda kids: st.one_of(
+            st.lists(kids, min_size=1, max_size=3).map(tuple),
+            st.dictionaries(st.sampled_from(["a", "b", "c", "G", "rows"]),
+                            kids, min_size=1, max_size=3)),
+        max_leaves=6)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.sampled_from(_MESHES), _tree)
+    def test_fleet_axis_specs_roundtrip_property(mesh, tree):
+        """fleet_axis_specs round-trips arbitrary pytrees: the spec tree
+        has the SAME treedef as the input (so `jax.tree.map(device_put,
+        tree, specs)` is well-formed), each spec has one entry per leaf
+        dim, axis 0 is the only possibly-sharded dim, and it shards exactly
+        when the mesh's data extent divides it."""
+        specs = rules.fleet_axis_specs(tree, mesh)
+        assert (jax.tree.structure(tree)
+                == jax.tree.structure(
+                    specs, is_leaf=lambda x: isinstance(x, P)))
+        d = rules.data_axis_size(mesh)
+        dax = rules.data_axes(mesh)
+        lead = dax if len(dax) > 1 else dax[0]
+        for leaf, spec in zip(
+                jax.tree.leaves(tree),
+                jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+            spec = tuple(spec)
+            assert len(spec) <= leaf.ndim
+            assert all(e is None for e in spec[1:])
+            if leaf.ndim and leaf.shape[0] % d == 0 and d > 1:
+                assert spec[0] == lead
+            elif leaf.ndim and spec:
+                assert spec[0] is None
