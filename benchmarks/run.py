@@ -24,6 +24,10 @@ benchmarks/artifacts/*.json. Pass --fast for a reduced sweep (CI-scale).
                      winner table
   scan_scale       : whole-run scan engine (core.scan_engine) vs the
                      per-round dispatch loop — rounds/sec across T
+  trace_replay     : recorded-trace availability (repro.scenarios
+                     .trace_replay) + elastic fleets over the committed
+                     fixture, and the checkpoint/kill/resume exactness
+                     gate (repro.checkpoint)
 """
 from __future__ import annotations
 
@@ -46,7 +50,7 @@ def main() -> None:
     names = ("tau_stats", "agg_throughput", "adversarial", "case_study",
              "fig2_convergence", "roofline_bench", "time_to_accuracy",
              "bank_scale", "fleet_scale", "scenario_grid", "scenario_atlas",
-             "scan_scale")
+             "scan_scale", "trace_replay")
     # validate BEFORE any benchmark module imports: a typo'd --only must
     # not silently run *nothing* (hollow CI smoke steps), and it must not
     # die on some unrelated module's import error either

@@ -78,7 +78,9 @@ def scenario_tau_stats(scen, n_rounds: int) -> dict:
     """Empirical τ statistics from the host surface + theory classification."""
     sampler = scen.process.host_sampler()
     masks = np.stack([sampler.sample(t) for t in range(n_rounds)])
-    tm = tau_matrix(masks)
+    # elastic fleets legitimately violate Definition 5.2(1) at round 0
+    # (un-arrived clients); their τ counts from the virtual round −1
+    tm = tau_matrix(masks, strict=scen.process.round0_all_active)
     tb = scen.process.tau_bound()
     return {
         "rate_empirical": float(masks.mean()),
@@ -108,13 +110,19 @@ def build_algorithms(names, n_clients: int, scen0) -> dict:
 def sweep_cells(*, algo_names, n_clients: int, n_rounds: int, seeds,
                 stage_len: int, engine: str = "loop",
                 emit_prefix: str = "scenario_grid",
-                n_per_class: int = 500) -> dict:
+                n_per_class: int = 500, axis=None) -> dict:
     """Run the algorithm × scenario × seed sweep; returns the results dict.
 
     Each (scenario, algorithm) cell runs its seeds as ONE fleet program —
     `engine="scan"` compiles the whole cell into jit(scan(vmap)) chunks
     (the atlas path); "loop" dispatches one vmapped program per round.
+    `axis` overrides the scenario axis — a list of (label, registry name,
+    kwargs) cells; default `scenario_axis(stage_len)`. The atlas appends a
+    trace-replay cell; benchmarks/trace_replay.py sweeps a pure
+    trace/elastic axis over the committed fixture.
     """
+    if axis is None:
+        axis = scenario_axis(stage_len)
     model, batcher, _probs, _mp, eval_fn = paper_problem(
         "paper_logistic", n_clients=n_clients, n_per_class=n_per_class)
     fleet_eval = make_fleet_eval(model, eval_fn.eval_batch)
@@ -126,7 +134,7 @@ def sweep_cells(*, algo_names, n_clients: int, n_rounds: int, seeds,
     results: dict = {"n_clients": n_clients, "n_rounds": n_rounds,
                      "seeds": list(seeds), "engine": engine,
                      "algorithms": list(algo_names), "cells": []}
-    for label, name, kwargs in scenario_axis(stage_len):
+    for label, name, kwargs in axis:
         scen0 = make_scenario(name, n=n_clients, seed=0, **kwargs)
         tau = scenario_tau_stats(scen0, n_rounds)
         algos = build_algorithms(algo_names, n_clients, scen0)

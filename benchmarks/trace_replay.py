@@ -1,0 +1,218 @@
+"""Trace-replay benchmark: recorded availability + checkpoint/resume.
+
+Two sections, both over the COMMITTED fixture trace
+(benchmarks/fixtures/device_trace_n20_t64.npy — 20 devices, 64 rounds,
+Gilbert–Elliott bursts with 10% permanent churn; docs/operations.md has
+the recipe that generated it):
+
+  * **Convergence cells** — the scenario-grid algorithms over a
+    trace-driven axis through `sweep_cells`: the bare replayed trace and
+    the same trace under an elastic fleet (staged arrivals + departures
+    folded into the mask). Availability comes off disk in windows
+    (`TraceReplay`), never as a (T, N) matrix; every cell runs as one
+    jit(scan(vmap)) fleet program. The full (non `--fast`) run adds a
+    synthesized N=60 trace cell at grid scale.
+  * **Resume exactness** — the PR's durability acceptance gate as a
+    measured artifact: a checkpointed run killed mid-horizon and resumed
+    from its latest snapshot must match the uninterrupted run fp32
+    bit-exactly. `resume.max_abs_diff` is pinned to 0.0 in
+    benchmarks/baselines/ci_baseline.json — any drift (a leaf missing
+    from the snapshot, a replayed sampler off by a round) fails CI.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+from common import ARTIFACTS, emit, paper_problem, save_artifact
+from scenario_grid import GRID_ALGOS, sweep_cells
+
+from repro.checkpoint import CheckpointSpec, latest_checkpoint
+from repro.core import MIFA, run_fl
+from repro.optim import inv_t
+from repro.scenarios import Scenario, TraceReplay
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "device_trace_n20_t64.npy")
+
+
+def fixture_axis() -> list[tuple[str, str, dict]]:
+    """(label, registry, kwargs) cells over the committed fixture trace."""
+    return [
+        ("trace_fixture", "trace_replay", {"path": FIXTURE}),
+        ("trace_elastic", "elastic",
+         {"inner": "trace_replay", "inner_kwargs": {"path": FIXTURE},
+          "n_initial": 10, "arrive_every": 8, "depart_frac": 0.1,
+          "depart_at": 40}),
+    ]
+
+
+def resume_section(fast: bool) -> dict:
+    """Kill a checkpointed run mid-horizon, resume, measure the deviation
+    from the uninterrupted run (0.0 == bit-exact, the pinned value)."""
+    T = 24 if fast else 64
+    kill, every, chunk, window = T // 2, T // 4, 8, 16
+    model, batcher, _probs, _mp, _eval = paper_problem(
+        "paper_logistic", n_clients=20, n_per_class=120 if fast else 500,
+        batch_size=20, k_steps=2)
+    scen = lambda: Scenario(TraceReplay(FIXTURE, window=window),
+                            name="fixture")
+    kw = dict(model=model, batcher=batcher, schedule=inv_t(1.0),
+              weight_decay=1e-3, seed=0, eval_every=T,
+              engine="scan_strict", scan_chunk=chunk)
+    work = tempfile.mkdtemp(prefix="trace_replay_ck_")
+    try:
+        spec = lambda d, resume=False: CheckpointSpec(
+            every=every, dir=os.path.join(work, d), resume=resume)
+        t0 = time.time()
+        params_full, hist_full = run_fl(algo=MIFA(memory="array"),
+                                        scenario=scen(), n_rounds=T,
+                                        checkpoint=spec("full"), **kw)
+        wall_full = time.time() - t0
+        run_fl(algo=MIFA(memory="array"), scenario=scen(), n_rounds=kill,
+               checkpoint=spec("killed"), **kw)
+        t0 = time.time()
+        params_res, hist_res = run_fl(algo=MIFA(memory="array"),
+                                      scenario=scen(), n_rounds=T,
+                                      checkpoint=spec("killed", resume=True),
+                                      **kw)
+        wall_resumed = time.time() - t0
+        diffs = [np.abs(np.asarray(a, np.float64) - np.asarray(b, np.float64))
+                 for a, b in zip(jax.tree.leaves(params_full),
+                                 jax.tree.leaves(params_res))]
+        max_diff = float(max(d.max() for d in diffs))
+        loss_diff = float(np.max(np.abs(
+            np.asarray(hist_full.train_loss, np.float64)
+            - np.asarray(hist_res.train_loss, np.float64))))
+        snap = latest_checkpoint(os.path.join(work, "killed"))
+        out = {"n_rounds": T, "kill_at": kill, "every": every,
+               "max_abs_diff": max_diff, "train_loss_max_diff": loss_diff,
+               "snapshot_bytes": os.path.getsize(snap),
+               "wall_full_s": wall_full, "wall_resumed_s": wall_resumed}
+        emit("trace_replay/resume", wall_resumed / max(T - kill, 1) * 1e6,
+             f"max_abs_diff={max_diff:g};snapshot_kb="
+             f"{out['snapshot_bytes'] / 1024:.0f}")
+        return out
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def main(fast: bool = False) -> None:
+    n_rounds = 24 if fast else 64          # fixture records 64 rounds
+    seeds = (0,) if fast else (0, 1, 2)
+    results = sweep_cells(algo_names=GRID_ALGOS, n_clients=20,
+                          n_rounds=n_rounds, seeds=seeds, stage_len=8,
+                          engine="scan", emit_prefix="trace_replay",
+                          n_per_class=120 if fast else 500,
+                          axis=fixture_axis())
+    if not fast:
+        # grid-scale synthesized trace (cached under the tempdir; each
+        # seed records its own trace, matching the atlas cell's recipe)
+        synth = sweep_cells(
+            algo_names=GRID_ALGOS, n_clients=60, n_rounds=160,
+            seeds=seeds, stage_len=8, engine="scan",
+            emit_prefix="trace_replay", n_per_class=500,
+            axis=[("trace_synth_n60", "trace_replay",
+                   {"horizon": 160, "rate": 0.5, "burst": 6.0,
+                    "churn": 0.1})])
+        results["cells"] += synth["cells"]
+    results["resume"] = resume_section(fast)
+    save_artifact("trace_replay", results)
+    if not fast:
+        # committed .md is the full-scale table; --fast must not clobber it
+        write_md(results)
+
+
+def write_md(results: dict) -> None:
+    """benchmarks/artifacts/trace_replay.md — trace cells + resume gate."""
+    lines = [
+        "# Trace replay: recorded availability, elastic fleets, and "
+        "checkpoint/resume",
+        "",
+        f"Fleet sweep over the committed fixture trace "
+        f"(benchmarks/fixtures/device_trace_n20_t64.npy: N=20 devices, "
+        f"64 recorded rounds, Gilbert–Elliott bursts + 10% permanent "
+        f"churn), seeds={results['seeds']}, plus a synthesized N=60 / "
+        "T=160 trace at grid scale. Availability streams off disk in "
+        "windows (`repro.scenarios.trace_replay`) — no (T, N) mask matrix "
+        "exists at any point. Regenerate with `PYTHONPATH=src python "
+        "benchmarks/run.py --only trace_replay` (docs/benchmarks.md); the "
+        "trace format and checkpoint runbook live in docs/operations.md.",
+        "",
+        "## Final eval loss (mean over seeds)",
+        "",
+        "| cell | rate | τ̄ | τ_max | A4 regime | "
+        + " | ".join(results["algorithms"]) + " | winner |",
+        "|---|---|---|---|---|" + "---|" * (len(results["algorithms"]) + 1),
+    ]
+    for c in results["cells"]:
+        t = c["tau"]
+        regime = ("deterministic τ≤" + f"{t['assumption4_t0']:.0f}"
+                  if t["assumption4_deterministic"] else "arbitrary")
+        row = [c["scenario"], f"{t['rate_empirical']:.2f}",
+               f"{t['tau_bar']:.2f}", str(t["tau_max"]), regime]
+        for name in results["algorithms"]:
+            v = c["algorithms"][name]["final_loss_mean"]
+            row.append(f"**{v:.4f}**" if name == c["winner"]
+                       else f"{v:.4f}")
+        row.append(c["winner"])
+        lines.append("| " + " | ".join(row) + " |")
+    r = results["resume"]
+    lines += [
+        "",
+        "## Checkpoint/resume exactness (the durability gate)",
+        "",
+        f"A checkpointed MIFA run (T={r['n_rounds']}, snapshot every "
+        f"{r['every']} rounds) killed after round {r['kill_at']} and "
+        "resumed from its latest snapshot, vs the uninterrupted run:",
+        "",
+        "| metric | value |",
+        "|---|---|",
+        f"| max abs param diff | {r['max_abs_diff']:g} |",
+        f"| max abs train-loss diff | {r['train_loss_max_diff']:g} |",
+        f"| snapshot size | {r['snapshot_bytes'] / 1024:.0f} KiB |",
+        f"| uninterrupted wall | {r['wall_full_s']:.2f} s |",
+        f"| resumed-half wall | {r['wall_resumed_s']:.2f} s |",
+        "",
+        "Both diffs must be exactly 0.0 (fp32 bit-exact) — pinned in "
+        "benchmarks/baselines/ci_baseline.json and property-tested across "
+        "algorithms (dense MIFA, banked dense, banked paged) in "
+        "tests/test_trace_replay.py.",
+        "",
+        "## Reading the table",
+        "",
+        "The trace cells are the arbitrary-unavailability regime on "
+        "recorded data: churned devices never return, so no availability "
+        "law exists for any algorithm to assume. The informative column "
+        "pair is mifa vs fedavg (`fedavg_is` ends lowest everywhere for "
+        "the step-size reason the atlas documents — its 1/p weights "
+        "roughly double the effective step on this convex problem — so "
+        "its raw lead is not a like-for-like read). On the bare recording "
+        "memorisation is ahead (fixture: bursty correlated absence WITH "
+        "eventual return is exactly the biased-cohort case its memory "
+        "corrects), and at N=60 synth scale the two tie. The elastic cell "
+        "flips the sign: once staged departures remove devices "
+        "permanently, MIFA keeps averaging their frozen updates with "
+        "uniform weight forever — surrogate gradients whose staleness "
+        "grows linearly — and plain FedAvg, which simply forgets the "
+        "departed, ends well below it. That boundary is the point of the "
+        "benchmark: memorisation's guarantee prices bounded staleness "
+        "(Assumption 4 with b > 1); a fleet that shrinks for good "
+        "delivers τ = t − t_depart, the b = 1 edge where the memory "
+        "turns from correction into anchor.",
+        "",
+    ]
+    path = os.path.join(ARTIFACTS, "trace_replay.md")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -90,6 +90,26 @@ class MemoryBank:
         trace."""
         return state
 
+    def host_state(self) -> dict:
+        """Host-side bookkeeping to persist in a run snapshot.
+
+        Backends whose correctness depends on state OUTSIDE the jit state
+        pytree (PagedDeviceBank's residency mirrors, LRU clocks, spilled
+        pages) return it here as a pytree of arrays, consumed by
+        `checkpoint.run_state.save_run`. The default is empty: for fully
+        in-jit backends (DenseBank) the snapshot's `runner.state` already
+        holds everything.
+        """
+        return {}
+
+    def load_host_state(self, tree: dict) -> None:
+        """Restore what `host_state` returned (checkpoint resume hook).
+
+        Must be called after `init` (the bank's shapes exist) and before
+        the first round of the resumed run. The default is a no-op.
+        """
+        del tree
+
     def mean_g(self, state: dict) -> Any:
         """G_sum / N as a device (jnp) pytree with param-shaped leaves."""
         raise NotImplementedError

@@ -457,6 +457,53 @@ class PagedDeviceBank(MemoryBank):
         return jax.tree.map(lambda g: g / self.n, state["g_sum"])
 
     # ------------------------------------------------------------------ #
+    def host_state(self) -> dict:
+        """Serialise the host-side residency bookkeeping for a snapshot.
+
+        The jit state (`pages` / `page_table` / `g_sum`) rides the run
+        snapshot through `runner.state`; this captures its host mirrors —
+        page-table mirror, slot ownership, the free list IN ORDER (slot
+        assignment order is part of the trajectory), LRU stamps, fault
+        counters, and every spilled page's bytes — so a resumed run pages
+        exactly like the uninterrupted one.
+        """
+        lps = sorted(self._spill)
+        tree = {
+            "pt": self._pt, "slot_lp": self._slot_lp,
+            "free": np.asarray(self._free, np.int64),
+            "lru_keys": np.asarray(sorted(self._lru), np.int64),
+            "lru_vals": np.asarray([self._lru[k] for k in sorted(self._lru)],
+                                   np.int64),
+            "clock": np.int64(self._clock),
+            "faults": np.int64(self.faults),
+            "evictions": np.int64(self.evictions),
+            "spill_lp": np.asarray(lps, np.int64),
+        }
+        if lps:
+            tree["spill"] = [self._spill[lp] for lp in lps]
+        return tree
+
+    def load_host_state(self, tree: dict) -> None:
+        """Restore `host_state` bookkeeping (after `init`, before rounds)."""
+        if not tree:
+            return
+        self._pt = np.asarray(tree["pt"], np.int32).copy()
+        self._slot_lp = np.asarray(tree["slot_lp"], np.int64).copy()
+        self._free = [int(s) for s in np.asarray(tree["free"])]
+        self._lru = {int(k): int(v) for k, v in
+                     zip(np.asarray(tree["lru_keys"]),
+                         np.asarray(tree["lru_vals"]))}
+        self._clock = int(tree["clock"])
+        self.faults = int(tree["faults"])
+        self.evictions = int(tree["evictions"])
+        self._spill = {}
+        for lp, entry in zip(np.asarray(tree["spill_lp"], np.int64),
+                             tree.get("spill", [])):
+            e = {"pages": [np.asarray(p) for p in entry["pages"]]}
+            if "scales" in entry:
+                e["scales"] = [np.asarray(s) for s in entry["scales"]]
+            self._spill[int(lp)] = e
+
     def n_resident(self) -> int:
         return int((self._pt[:self.lp] != self.sentinel).sum())
 

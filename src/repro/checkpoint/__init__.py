@@ -1,1 +1,9 @@
+"""Checkpoint subsystem: atomic pytree snapshots (`io`) and whole-run
+checkpoint/resume for `run_fl` (`run_state`); docs/operations.md is the
+runbook."""
 from repro.checkpoint.io import save_pytree, load_pytree  # noqa: F401
+from repro.checkpoint.run_state import (CheckpointSpec,  # noqa: F401
+                                        checkpoint_path, fast_forward_sampler,
+                                        latest_checkpoint, list_checkpoints,
+                                        prune_checkpoints, restore_run,
+                                        save_run)

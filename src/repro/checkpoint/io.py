@@ -3,6 +3,12 @@
 Nested dicts/lists of arrays <-> flat npz keys joined with '/'. List indices
 are stored as '#i' components (so dict keys that *look* numeric — e.g. the
 transformer's segment indices — round-trip as dicts, not lists).
+
+Durability contract: `save_pytree` writes to a temporary file in the SAME
+directory and atomically renames it over the destination, so a crash (or
+kill) mid-write can never leave a torn checkpoint — the previous snapshot
+at that path survives intact (pinned by tests/test_checkpoint.py). This is
+what `checkpoint.run_state` builds long-horizon resume on.
 """
 from __future__ import annotations
 
@@ -29,16 +35,40 @@ def _flatten(tree, prefix: str = "") -> dict:
     return out
 
 
-def save_pytree(path: str, tree) -> None:
+def save_pytree(path: str, tree) -> str:
+    """Persist a pytree of arrays to `path` (npz), atomically.
+
+    The tree is device_get-ed, flattened to '/'-joined keys, and written
+    via a same-directory temp file + `os.replace` — the destination is
+    either the complete new snapshot or untouched, never a torn file.
+    bfloat16 leaves are stored as uint16 views plus a key manifest (npz
+    cannot hold bf16 natively). A ``.npz`` suffix is appended if missing
+    (matching `np.savez`); returns the actual path written.
+    """
     flat = _flatten(jax.device_get(tree))
     # npz cannot store bfloat16: persist as uint16 views + a key manifest
     bf16_keys = [k for k, v in flat.items() if v.dtype == ml_dtypes.bfloat16]
     for k in bf16_keys:
         flat[k] = flat[k].view(np.uint16)
     flat[_BF16_KEY] = np.asarray(bf16_keys)
+    if not path.endswith(".npz"):
+        path += ".npz"
     parent = os.path.dirname(os.path.abspath(path))
     os.makedirs(parent, exist_ok=True)
-    np.savez(path, **flat)
+    # write to a sibling temp file and rename: np.savez straight into the
+    # final path truncates before writing, so a crash mid-write tears the
+    # PREVIOUS snapshot. Passing the open file object (not a path) keeps
+    # np.savez from appending its own suffix to the temp name.
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
 
 
 def _insert(root: dict, parts: list[str], value):
@@ -64,6 +94,13 @@ def _listify(node):
 
 
 def load_pytree(path: str, as_jax: bool = True):
+    """Load a `save_pytree` snapshot back into a nested pytree.
+
+    Inverts the flattening ('/'-joined keys -> nested dicts, '#i'
+    components -> lists) and restores bf16 leaves from their uint16
+    views. `as_jax=False` keeps the leaves as NumPy arrays (host-side
+    consumers like `checkpoint.run_state.restore_run`).
+    """
     with np.load(path) as z:
         bf16 = set(z[_BF16_KEY].tolist()) if _BF16_KEY in z.files else set()
         root: dict = {}

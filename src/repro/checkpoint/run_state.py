@@ -1,0 +1,207 @@
+"""Whole-run checkpoint/resume for `run_fl` (long-horizon durability).
+
+A snapshot is ONE atomic npz (`checkpoint.io.save_pytree`) holding
+everything the scan engine's trajectory depends on at a chunk boundary:
+
+  * the scan carry — params, algorithm state (bank pages + page table
+    included, since they live in `runner.state`), the round RNG, and the
+    scenario chain state + key (which for trace replay contains the
+    carried availability window, i.e. the trace cursor);
+  * host-side bank residency bookkeeping (`MemoryBank.host_state` — page
+    table mirror, LRU clocks, spilled pages) for paged banks;
+  * τ statistics (`TauStats`) and the recorded `FLHistory` so far;
+  * the next round to run, the client count, and a format tag.
+
+Resume invariants (docs/operations.md has the runbook): a run restored
+from the snapshot at round k and continued to T produces the fp32
+bit-exact params and history of the uninterrupted T-round run — this
+reduces to the scan engine's chunk-boundary invariance (the resumed run's
+chunk cuts differ only where cuts already don't matter) plus the fact
+that every source of randomness (round RNG, scenario key, host sampler
+streams) is either in the snapshot or deterministically fast-forwarded
+(`fast_forward_sampler`). Pinned by tests/test_trace_replay.py.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+_FORMAT = "repro-run-v1"
+_NAME_RE = re.compile(r"^ckpt_r(\d{8})\.npz$")
+
+
+@dataclass(frozen=True)
+class CheckpointSpec:
+    """Checkpoint request for `run_fl(checkpoint=...)`.
+
+    Attributes:
+      every: snapshot after every `every` completed rounds (the scan
+        engine snaps its chunk boundaries to these rounds, like evals).
+      dir: snapshot directory; files are ``ckpt_r<round:08d>.npz``.
+      keep: retain only the newest `keep` snapshots (None: keep all).
+      resume: when True, `run_fl` restores the latest snapshot in `dir`
+        (if any) and continues from its round instead of round 0.
+    """
+
+    every: int
+    dir: str
+    keep: int | None = None
+    resume: bool = False
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"checkpoint every must be >= 1, "
+                             f"got {self.every}")
+        if self.keep is not None and self.keep < 1:
+            raise ValueError(f"checkpoint keep must be >= 1, "
+                             f"got {self.keep}")
+
+
+def checkpoint_path(dir: str, round: int) -> str:
+    """Snapshot filename for the state AFTER `round` completed rounds."""
+    return os.path.join(dir, f"ckpt_r{round:08d}.npz")
+
+
+def list_checkpoints(dir: str) -> list[tuple[int, str]]:
+    """(round, path) for every snapshot in `dir`, oldest first."""
+    if not os.path.isdir(dir):
+        return []
+    out = []
+    for name in os.listdir(dir):
+        m = _NAME_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(dir, name)))
+    return sorted(out)
+
+
+def latest_checkpoint(dir: str) -> str | None:
+    """Path of the newest snapshot in `dir`, or None when there is none."""
+    found = list_checkpoints(dir)
+    return found[-1][1] if found else None
+
+
+def prune_checkpoints(dir: str, keep: int) -> None:
+    """Delete all but the newest `keep` snapshots in `dir`."""
+    for _, path in list_checkpoints(dir)[:-keep]:
+        os.unlink(path)
+
+
+def _hist_to_tree(hist) -> dict:
+    """FLHistory -> arrays (float64/int64, exact round-trip)."""
+    return {
+        "rounds": np.asarray(hist.rounds, np.int64),
+        "train_loss": np.asarray(hist.train_loss, np.float64),
+        "n_active": np.asarray(hist.n_active, np.float64),
+        "global_updates": np.asarray(hist.global_updates, np.float64),
+        "eval_rounds": np.asarray([t for t, _ in hist.eval_loss], np.int64),
+        "eval_loss": np.asarray([v for _, v in hist.eval_loss], np.float64),
+        "eval_acc": np.asarray([v for _, v in hist.eval_acc], np.float64),
+    }
+
+
+def _hist_from_tree(hist, tree: dict) -> None:
+    """Restore the list fields of an FLHistory from `_hist_to_tree`."""
+    hist.rounds = [int(t) for t in tree["rounds"]]
+    hist.train_loss = list(map(float, tree["train_loss"]))
+    hist.n_active = list(map(float, tree["n_active"]))
+    hist.global_updates = list(map(float, tree["global_updates"]))
+    ev_t = [int(t) for t in tree["eval_rounds"]]
+    hist.eval_loss = list(zip(ev_t, map(float, tree["eval_loss"])))
+    hist.eval_acc = list(zip(ev_t, map(float, tree["eval_acc"])))
+
+
+def save_run(runner, spec: CheckpointSpec, round_next: int) -> str:
+    """Snapshot `runner`'s full state after `round_next` completed rounds.
+
+    Called by the scan engine at a flushed chunk boundary (stats and
+    history are current through round ``round_next - 1``). Atomic via
+    `save_pytree`; prunes to `spec.keep` afterwards. Returns the path.
+    """
+    s = runner.stats
+    tree = {
+        "format": _FORMAT,
+        "round": np.int64(round_next),
+        "n_clients": np.int64(runner.n_clients),
+        "carry": {"state": runner.state, "params": runner.params,
+                  "rng": runner.rng},
+        "stats": {"tau": s.tau, "tau_max_per_dev": s.tau_max_per_dev,
+                  "sum_tau": np.float64(s.sum_tau),
+                  "sum_tau_sq": np.float64(s.sum_tau_sq),
+                  "rounds": np.int64(s.rounds)},
+        "hist": _hist_to_tree(runner.hist),
+    }
+    if hasattr(runner, "scen_state") and runner.scen_state is not None:
+        tree["carry"]["scen_state"] = runner.scen_state
+        tree["carry"]["scen_key"] = runner.scen_key
+    bank = getattr(runner.algo, "bank", None)
+    if bank is not None and hasattr(bank, "host_state"):
+        tree["bank"] = bank.host_state()       # {} flattens to nothing
+    path = save_pytree(checkpoint_path(spec.dir, round_next), tree)
+    if spec.keep is not None:
+        prune_checkpoints(spec.dir, spec.keep)
+    return path
+
+
+def restore_run(runner, spec: CheckpointSpec) -> int:
+    """Restore `runner` from the latest snapshot in `spec.dir`.
+
+    Returns the round to resume from (0 when no snapshot exists — a
+    fresh run). Raises when the snapshot's client count does not match
+    the runner (resuming under a different problem is always a bug).
+    """
+    path = latest_checkpoint(spec.dir)
+    if path is None:
+        return 0
+    tree = load_pytree(path, as_jax=False)
+    fmt = str(np.asarray(tree["format"]))
+    if fmt != _FORMAT:
+        raise ValueError(f"{path}: unknown snapshot format {fmt!r} "
+                         f"(expected {_FORMAT!r})")
+    n = int(tree["n_clients"])
+    if n != runner.n_clients:
+        raise ValueError(f"{path}: snapshot has {n} clients, runner has "
+                         f"{runner.n_clients} — refusing to resume")
+    carry = tree["carry"]
+    runner.state = jax.tree.map(jnp.asarray, carry["state"])
+    runner.params = jax.tree.map(jnp.asarray, carry["params"])
+    runner.rng = jnp.asarray(carry["rng"])
+    if "scen_state" in carry:
+        runner.scen_state = jax.tree.map(jnp.asarray, carry["scen_state"])
+        runner.scen_key = jnp.asarray(carry["scen_key"])
+    st = tree["stats"]
+    runner.stats.tau = np.asarray(st["tau"], np.int64)
+    runner.stats.tau_max_per_dev = np.asarray(st["tau_max_per_dev"],
+                                              np.int64)
+    runner.stats.sum_tau = float(st["sum_tau"])
+    runner.stats.sum_tau_sq = float(st["sum_tau_sq"])
+    runner.stats.rounds = int(st["rounds"])
+    _hist_from_tree(runner.hist, tree["hist"])
+    bank = getattr(runner.algo, "bank", None)
+    if bank is not None and hasattr(bank, "load_host_state"):
+        bank.load_host_state(tree.get("bank", {}))
+    return int(tree["round"])
+
+
+def fast_forward_sampler(sampler, start_round: int) -> None:
+    """Replay a host availability sampler through rounds [0, start_round).
+
+    Snapshots do not serialise host sampler state (NumPy generators,
+    Markov chains); on resume the stream is re-derived by sampling the
+    skipped rounds — deterministic, so the resumed rounds see exactly the
+    masks the uninterrupted run drew. Skipped entirely for stateless
+    scenario samplers (random-access by construction).
+    """
+    from repro.scenarios.base import HostSampler
+    if sampler is None or start_round <= 0:
+        return
+    if isinstance(sampler, HostSampler) and sampler.process.stateless:
+        return
+    for t in range(start_round):
+        sampler.sample(t)

@@ -393,6 +393,13 @@ class RoundRunner:
                 donate_argnums=(0,))
             self.scen_state = proc.init_state()
             self.scen_key = proc.key
+            # windowed processes (trace replay) carry only `window` rounds
+            # of masks in scen_state; the loop engine re-pages between
+            # rounds (the scan engine uses its pre_chunk hook instead).
+            # None origin = unknown coverage, load before first use.
+            self._scen_win_start = (
+                0 if getattr(proc, "scan_window", None) is not None
+                else None)
 
     def learning_rates(self, t: int) -> tuple[float, float]:
         """η_local, η_server for round t (update-clock aware)."""
@@ -440,6 +447,14 @@ class RoundRunner:
         if self.scenario_round_fn is None:        # cohort: host surface
             return self.step(t, self._scen_sampler.sample(t),
                              sim_time=sim_time)
+        w = getattr(self.scen_process, "scan_window", None)
+        if w is not None:
+            ws = self._scen_win_start
+            if ws is None or not ws <= t < ws + w:
+                t0 = (t // w) * w
+                self.scen_state = self.scen_process.load_window(
+                    self.scen_state, t0)
+                self._scen_win_start = t0
         batch = self.batcher.sample_round(t)
         eta_loc, eta_srv = self.learning_rates(t)
         self.rng, sub = jax.random.split(self.rng)
@@ -518,7 +533,7 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
            eval_fn: Callable | None = None, eval_every: int = 10,
            params=None, uses_update_clock: bool = False,
            cohort_capacity: int | None = None, engine: str = "loop",
-           scan_chunk: int = 64, mesh=None, cfg=None,
+           scan_chunk: int = 64, checkpoint=None, mesh=None, cfg=None,
            verbose: bool = False) -> tuple[Any, FLHistory]:
     """Run T round-synchronous rounds of federated training.
 
@@ -563,6 +578,19 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
         loop with a warning.
       * "scan_strict" — like "scan" but unsupported configurations raise.
 
+    `checkpoint` (a `repro.checkpoint.CheckpointSpec`) wires long-horizon
+    durability: the scan engine snapshots the FULL run state (params,
+    algorithm state incl. bank pages + host residency bookkeeping, round
+    RNG, scenario/trace cursor, τ stats, history) through
+    `checkpoint.run_state.save_run` after every `checkpoint.every`
+    completed rounds, atomically. With ``checkpoint.resume=True`` the
+    latest snapshot in ``checkpoint.dir`` is restored and the run
+    continues from its round — fp32 bit-exact against the uninterrupted
+    run (docs/operations.md runbook, pinned in tests/test_trace_replay).
+    Scan engines only: snapshots ride chunk boundaries, so ``engine``
+    must not be "loop", and a configuration the scan cannot express
+    raises rather than silently dropping durability.
+
     `mesh` (scan engines only) places the scan carry under explicit
     shardings (`sharding.rules.scan_carry_specs`): params by the model
     rules when `cfg` (an `ArchConfig`) is given, MIFA's update array /
@@ -580,6 +608,15 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
     if engine not in ("loop", "scan", "scan_strict"):
         raise ValueError(f"unknown engine {engine!r}: expected 'loop', "
                          "'scan', or 'scan_strict'")
+    if checkpoint is not None:
+        if sim is not None:
+            raise ValueError("checkpoint= is not supported for simulated "
+                             "runs (the compiled simulator carry holds "
+                             "event-queue state with no snapshot schema)")
+        if engine == "loop":
+            raise ValueError("checkpoint= rides the scan engine's chunk "
+                             "boundaries; pass engine='scan' (or "
+                             "'scan_strict')")
     if mesh is not None:
         if engine == "loop":
             raise ValueError("mesh= places the scan carry; it has no effect "
@@ -625,6 +662,19 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
                                eval_every=eval_every)
         hist.wall_time = time.time() - t0
         return params, hist
+    start_round = 0
+    if checkpoint is not None and checkpoint.resume:
+        from repro.checkpoint.run_state import (fast_forward_sampler,
+                                                restore_run)
+        start_round = restore_run(runner, checkpoint)
+        if start_round:
+            # host availability streams are not in the snapshot; replay
+            # them through the restored rounds so the remaining rounds
+            # draw exactly the uninterrupted run's masks
+            fast_forward_sampler(participation, start_round)
+            fast_forward_sampler(runner._scen_sampler, start_round)
+        if start_round >= n_rounds:
+            return runner.finalize()
     if engine != "loop":
         from repro.core.scan_engine import ScanDriver, scan_supported
         ok, why = scan_supported(runner)
@@ -633,11 +683,17 @@ def run_fl(*, model, algo, batcher, schedule: Callable, n_rounds: int,
             ScanDriver(runner, scan_chunk=scan_chunk, mesh=mesh,
                        cfg=cfg).run(
                 n_rounds, participation=participation, eval_fn=eval_fn,
-                eval_every=eval_every, verbose=verbose)
+                eval_every=eval_every, verbose=verbose,
+                checkpoint=checkpoint, start_round=start_round)
             runner.hist.wall_time = time.time() - t0
             return runner.finalize()
         if engine == "scan_strict":
             raise ValueError(f"engine='scan_strict': {why}")
+        if checkpoint is not None:
+            raise ValueError(
+                f"checkpoint= needs the scan engine, but this "
+                f"configuration cannot scan ({why}); refusing to fall "
+                "back and silently drop durability")
         if mesh is not None:
             raise ValueError(f"engine='scan' with mesh= cannot fall back "
                              f"to the per-round loop (the loop ignores "

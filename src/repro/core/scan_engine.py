@@ -81,16 +81,21 @@ def _eval_rounds(n_rounds: int, eval_every: int, has_eval: bool) -> set:
     return pts
 
 
-def chunk_bounds(n_rounds: int, scan_chunk: int,
-                 eval_rounds: set) -> list[tuple[int, int]]:
-    """[t0, t1) segments: cut every `scan_chunk` rounds AND after each eval
-    round, so evals land exactly where the loop engine runs them."""
+def chunk_bounds(n_rounds: int, scan_chunk: int, eval_rounds: set,
+                 start: int = 0) -> list[tuple[int, int]]:
+    """[t0, t1) segments over rounds [start, n_rounds): cut every
+    `scan_chunk` rounds AND after each eval/sync round, so evals land
+    exactly where the loop engine runs them. `start` > 0 is the resume
+    case (checkpoint restore): the chunk grid stays anchored at round 0,
+    so a resumed run shares every boundary past `start` with the
+    uninterrupted run — and by chunk-boundary invariance the extra cut at
+    `start` itself does not perturb the trajectory."""
     if scan_chunk < 1:
         raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
-    cuts = {0, n_rounds}
+    cuts = {start, n_rounds}
     cuts.update(range(0, n_rounds, scan_chunk))
     cuts.update(t + 1 for t in eval_rounds if t < n_rounds)
-    edges = sorted(cuts)
+    edges = sorted(c for c in cuts if start <= c <= n_rounds)
     return list(zip(edges[:-1], edges[1:]))
 
 
@@ -214,6 +219,21 @@ class ScanDriver:
         # the union of the upcoming chunk's cohorts, stashed by _build_xs
         # for the paged-bank pre_chunk residency hook
         self._last_union = None
+        # windowed scenarios (trace replay): the carried availability
+        # window is re-paged by the same pre_chunk hook; _seg is the
+        # upcoming chunk's [t0, t1), _win_start the host-tracked origin of
+        # the window currently in the carry (None = force a load — also
+        # the resume case, where the restored carry's window is opaque)
+        self._scan_window = (getattr(r.scen_process, "scan_window", None)
+                             if self.scenario_mode else None)
+        if self._scan_window is not None and scan_chunk > self._scan_window:
+            raise ValueError(
+                f"scan_chunk={scan_chunk} exceeds the scenario's carried "
+                f"availability window ({self._scan_window} rounds): a chunk "
+                "must be coverable by one window. Raise the scenario's "
+                "window= or lower scan_chunk")
+        self._seg = None
+        self._win_start = None
 
     # ------------------------------------------------------------------ #
     def _init_carry(self) -> dict:
@@ -257,6 +277,10 @@ class ScanDriver:
                                     carry["rng"])
         if self.scenario_mode:
             r.scen_state = carry["scen_state"]
+            # the key is carried through unchanged, but the INPUT buffer
+            # was donated — keep the runner pointing at the live output
+            # (checkpointing reads runner.scen_key between chunks)
+            r.scen_key = carry["scen_key"]
 
     def _etas(self, t0: int, t1: int) -> tuple[np.ndarray, np.ndarray]:
         pairs = [self.r.learning_rates(t) for t in range(t0, t1)]
@@ -279,6 +303,7 @@ class ScanDriver:
 
     def _build_xs(self, t0: int, t1: int, participation) -> dict:
         r = self.r
+        self._seg = (t0, t1)
         eta_loc, eta_srv = self._etas(t0, t1)
         xs = {"eta_loc": eta_loc, "eta_srv": eta_srv}
         if self.scenario_mode:
@@ -310,11 +335,25 @@ class ScanDriver:
         return xs
 
     def _pre_chunk(self, carry: dict) -> dict:
-        """Page the upcoming chunk union's rows in (paged banks only)."""
-        prep = getattr(self.r.algo, "prepare_cohort", None)
-        if prep is None or self._last_union is None:
-            return carry
-        return {**carry, "state": prep(carry["state"], self._last_union)}
+        """Host-side streaming between chunks, while the device still owns
+        the previous chunk: page the upcoming chunk union's bank rows in
+        (cohort mode, paged banks) or re-point a windowed scenario's
+        carried availability window at the chunk (trace replay). Both only
+        *replace* carry leaves with host-built arrays — no traced reads —
+        so the pipeline never stalls here."""
+        if self.r.cohort_mode:
+            prep = getattr(self.r.algo, "prepare_cohort", None)
+            if prep is None or self._last_union is None:
+                return carry
+            return {**carry, "state": prep(carry["state"], self._last_union)}
+        w, (t0, t1) = self._scan_window, self._seg
+        if (self._win_start is not None and self._win_start <= t0
+                and t1 <= self._win_start + w):
+            return carry                       # chunk already covered
+        carry = {**carry, "scen_state": self.r.scen_process.load_window(
+            carry["scen_state"], t0)}
+        self._win_start = t0
+        return carry
 
     def _flush(self, t0: int, t1: int, ys: dict, carry: dict) -> None:
         """Reconstruct per-round history (and τ stats) from the stacked ys.
@@ -334,26 +373,44 @@ class ScanDriver:
     # ------------------------------------------------------------------ #
     def run(self, n_rounds: int, *, participation=None,
             eval_fn: Callable | None = None, eval_every: int = 10,
-            verbose: bool = False) -> None:
-        """Execute `n_rounds` rounds, mutating the runner in place."""
+            verbose: bool = False, checkpoint=None,
+            start_round: int = 0) -> None:
+        """Execute rounds [start_round, n_rounds), mutating the runner in
+        place. `checkpoint` (a `repro.checkpoint.CheckpointSpec`) snapshots
+        the full run state at every `checkpoint.every`-round boundary —
+        the boundaries become chunk cuts like eval rounds, and the save
+        happens after the chunk flushed, so stats/history are current;
+        `start_round` > 0 continues a restored run (`run_fl` handles the
+        restore itself)."""
         r = self.r
         if (participation is None and r.scen_process is None):
             raise ValueError("ScanDriver.run needs participation= or a "
                              "runner constructed with scenario=")
         evals = _eval_rounds(n_rounds, eval_every, eval_fn is not None)
+        ckpts = set()
+        if checkpoint is not None:
+            ckpts = {t for t in range(start_round, n_rounds)
+                     if (t + 1) % checkpoint.every == 0}
 
         def on_sync(t):
-            el, ea = r.evaluate(t, eval_fn)
-            if verbose:
-                print(f"  round {t:5d} train={r.hist.train_loss[-1]:.4f} "
-                      f"eval={el:.4f} acc={ea:.4f} "
-                      f"active={int(r.hist.n_active[-1])}")
+            if t in evals:
+                el, ea = r.evaluate(t, eval_fn)
+                if verbose:
+                    print(f"  round {t:5d} "
+                          f"train={r.hist.train_loss[-1]:.4f} "
+                          f"eval={el:.4f} acc={ea:.4f} "
+                          f"active={int(r.hist.n_active[-1])}")
+            if t in ckpts:
+                from repro.checkpoint.run_state import save_run
+                save_run(r, checkpoint, t + 1)
 
+        use_pre = self.r.cohort_mode or self._scan_window is not None
         run_pipelined_chunks(
             self._init_carry(),
-            chunk_bounds(n_rounds, self.scan_chunk, evals),
+            chunk_bounds(n_rounds, self.scan_chunk, evals | ckpts,
+                         start=start_round),
             chunk_fn=self._chunk_fn,
             build_xs=lambda t0, t1: self._build_xs(t0, t1, participation),
             writeback=self._writeback, flush=self._flush,
-            sync_rounds=evals, on_sync=on_sync,
-            pre_chunk=self._pre_chunk if self.r.cohort_mode else None)
+            sync_rounds=evals | ckpts, on_sync=on_sync,
+            pre_chunk=self._pre_chunk if use_pre else None)

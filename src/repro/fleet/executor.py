@@ -221,10 +221,13 @@ class FleetRunner:
         self.scen_round_fn = None
         self._scen_fn = None
         self._scen_samplers = None
+        self._scen_procs = None
+        self._scen_win_start = None
         if scenarios is None:
             return
         from repro.scenarios.base import as_process
         procs = [as_process(s) for s in scenarios]
+        self._scen_procs = procs
         assert len(procs) == self.n_trials, (len(procs), self.n_trials)
         if any(type(p) is not type(procs[0]) for p in procs):
             raise ValueError(
@@ -248,6 +251,14 @@ class FleetRunner:
         self.scen_state = jax.tree.map(lambda *xs: jnp.stack(xs),
                                        *[p.init_state() for p in procs])
         self.scen_keys = jnp.stack([p.key for p in procs])
+        # windowed processes (trace replay): every trial's window must be
+        # the same length so the stacked (K, W, N) leaf is rectangular
+        ws = {getattr(p, "scan_window", None) for p in procs}
+        if len(ws) > 1:
+            raise ValueError(
+                "all trials in one fleet group must share the scenario "
+                f"window length, got {sorted(map(str, ws))}")
+        self._scen_win_start = 0 if ws != {None} else None
 
     def _shard_trial_axis(self, mesh, cfg) -> None:
         """Place every (K, ...)-leading trial structure — params, algorithm
@@ -328,6 +339,15 @@ class FleetRunner:
             return self.step(t, masks)
         assert self.scen_round_fn is not None, \
             "construct FleetRunner(scenarios=...) to use step_scenario"
+        procs = self._scen_procs
+        w = getattr(procs[0], "scan_window", None)
+        if w is not None:
+            ws = self._scen_win_start
+            if ws is None or not ws <= t < ws + w:
+                t0 = (t // w) * w
+                self.scen_state = procs[0].load_window_fleet(
+                    self.scen_state, procs, t0)
+                self._scen_win_start = t0
         batch = self.batcher.sample_round(t)
         eta_loc, eta_srv = self.learning_rates(t)
         self.rngs, subs = self._split()
@@ -437,6 +457,19 @@ class FleetScanDriver:
         self.r = r = runner
         self.scan_chunk = scan_chunk
         self.scenario_mode = r._scen_fn is not None
+        # windowed scenarios (trace replay): the stacked (K, W, N) window
+        # is re-paged at chunk boundaries via the pre_chunk hook, exactly
+        # like the sequential ScanDriver
+        self._scan_window = (getattr(r._scen_procs[0], "scan_window", None)
+                             if self.scenario_mode else None)
+        if self._scan_window is not None and scan_chunk > self._scan_window:
+            raise ValueError(
+                f"scan_chunk={scan_chunk} exceeds the scenario's carried "
+                f"availability window ({self._scan_window} rounds): a chunk "
+                "must be coverable by one window. Raise the scenario's "
+                "window= or lower scan_chunk")
+        self._seg = None
+        self._win_start = None
         body = make_scan_round_fn(
             r.model, r.algo, r.batcher.k_steps, r.weight_decay,
             scen_fn=r._scen_fn, cohort=r.cohort_mode)
@@ -515,6 +548,7 @@ class FleetScanDriver:
 
     def _build_xs(self, t0: int, t1: int, parts) -> dict:
         r = self.r
+        self._seg = (t0, t1)
         eta_loc, eta_srv = self._etas(t0, t1)
         xs = {"eta_loc": eta_loc, "eta_srv": eta_srv}
         if self.scenario_mode:
@@ -569,11 +603,23 @@ class FleetScanDriver:
         return xs
 
     def _pre_chunk(self, carry: dict) -> dict:
-        """Page the chunk's cross-trial union in (paged banks only)."""
-        prep = getattr(self.r.algo, "prepare_cohort", None)
-        if prep is None or self._last_union is None:
+        """Host-side streaming between chunks: page the chunk's cross-trial
+        union in (cohort mode, paged banks) or re-point the trials' stacked
+        availability window at the upcoming chunk (windowed scenarios)."""
+        if self.r.cohort_mode:
+            prep = getattr(self.r.algo, "prepare_cohort", None)
+            if prep is None or self._last_union is None:
+                return carry
+            return {**carry, "state": prep(carry["state"], self._last_union)}
+        w, (t0, t1) = self._scan_window, self._seg
+        if (self._win_start is not None and self._win_start <= t0
+                and t1 <= self._win_start + w):
             return carry
-        return {**carry, "state": prep(carry["state"], self._last_union)}
+        procs = self.r._scen_procs
+        carry = {**carry, "scen_state": procs[0].load_window_fleet(
+            carry["scen_state"], procs, t0)}
+        self._win_start = t0
+        return carry
 
     # ------------------------------------------------------------------ #
     def run(self, n_rounds: int, *, parts=None,
@@ -603,7 +649,8 @@ class FleetScanDriver:
             build_xs=lambda t0, t1: self._build_xs(t0, t1, parts),
             writeback=self._writeback, flush=flush,
             sync_rounds=evals, on_sync=on_sync,
-            pre_chunk=self._pre_chunk if r.cohort_mode else None)
+            pre_chunk=self._pre_chunk
+            if (r.cohort_mode or self._scan_window is not None) else None)
 
 
 def make_fleet_eval(model, eval_batch: dict) -> Callable:

@@ -14,3 +14,8 @@ from repro.scenarios.processes import (Adversarial, Bernoulli,  # noqa: F401
                                        StagedBlackout)
 from repro.scenarios.registry import (make_process, make_scenario,  # noqa: F401
                                       register, scenario_names)
+from repro.scenarios.trace_replay import (TraceFile, TraceReplay,  # noqa: F401
+                                          cached_trace, open_trace,
+                                          synthesize_trace, write_trace)
+from repro.scenarios.elastic import (ElasticProcess,  # noqa: F401
+                                     elastic_capacity, staged_arrivals)

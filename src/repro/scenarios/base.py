@@ -140,6 +140,11 @@ class AvailabilityProcess:
     n: int
     seed: int
     stateless: bool = True
+    #: Definition 5.2(1) convention: sample surfaces force every device
+    #: active at t == 0. `ElasticProcess` opts out (clients that have not
+    #: JOINED by round 0 cannot be active; runners use TauStats
+    #: strict=False to count their τ from the virtual round −1).
+    round0_all_active: bool = True
 
     @property
     def key(self) -> jax.Array:

@@ -1,0 +1,200 @@
+"""Elastic fleets: clients that arrive and depart mid-run.
+
+MIFA's state is one memory row per client, and every compiled engine in
+this repo (scan carry, fleet vmap, banked cohorts) has ONE static client
+axis — a fleet that literally grows would retrace and reallocate on every
+arrival. `ElasticProcess` models membership churn the same way the banks
+model variable cohorts: a *capacity-padded client axis*. Size the run for
+the peak fleet (`elastic_capacity` rounds up to a pow-2 growth bucket,
+the bank's padding idiom), and fold membership into availability:
+
+    active(t, i) = inner_mask(t, i) AND join_i <= t < leave_i
+
+Un-arrived and departed clients are plain inactive devices — `MemoryBank`
+rows that stay zero until first participation, `TauStats` entries whose τ
+grows, scan-carry rows that never change shape. No algorithm changes, no
+retracing per arrival. The modelling consequence is the honest one: MIFA
+averages its memory over the capacity N, so a client that has not arrived
+yet contributes its zero-init row to mean_G — exactly the paper's
+treatment of a device unseen since round 0 (the init convention behind
+TauStats strict=False). Departures make availability *arbitrary* in the
+paper's sense: a departed device has unbounded τ, so Assumption 4 fails
+— the regime where MIFA's guarantees are the interesting ones.
+
+Round-0 convention: the inner process forces round 0 all-active, but
+elasticity ANDs in presence, so round 0 is "every *present* client" —
+a documented deviation from Definition 5.2(1) that the runners already
+accommodate (they construct `TauStats(strict=False)`; absent clients
+count τ from the virtual round −1).
+
+Composes over any registered inner process, including `trace_replay` —
+the window protocol (docs: `scenarios.trace_replay.TraceReplay`) is
+forwarded to the inner process, so elastic trace replay streams windows
+exactly like the bare process.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios.base import AvailabilityProcess, TauBound
+from repro.scenarios.registry import make_process, register
+
+#: `leave` sentinel meaning "never departs" (any round beyond reach).
+NEVER = 1 << 30
+
+
+def elastic_capacity(peak_clients: int) -> int:
+    """Pow-2 growth bucket for an elastic run's client capacity.
+
+    Size the static client axis to `elastic_capacity(peak)` so arrivals
+    up to the peak never outgrow the allocated rows — the same pow-2
+    bucketing the cohort path uses for pad widths.
+    """
+    from repro.core.runner import _pow2_bucket
+    return _pow2_bucket(peak_clients)
+
+
+def staged_arrivals(n: int, *, n_initial: int, arrive_every: int = 16,
+                    arrive_count: int | None = None) -> np.ndarray:
+    """(n,) join rounds: `n_initial` clients at round 0, then batches of
+    `arrive_count` (default: the remainder over 4 waves) every
+    `arrive_every` rounds until the capacity is full."""
+    if not 0 < n_initial <= n:
+        raise ValueError(f"n_initial must be in (0, {n}], got {n_initial}")
+    extras = n - n_initial
+    if arrive_count is None:
+        arrive_count = max(-(-extras // 4), 1)
+    join = np.zeros(n, np.int64)
+    for i in range(extras):
+        join[n_initial + i] = arrive_every * (1 + i // arrive_count)
+    return join
+
+
+class ElasticProcess(AvailabilityProcess):
+    """Membership churn folded into any inner availability process.
+
+    State is ``{"inner": <inner state>, "join": (n,) int32, "leave": (n,)
+    int32}`` — the join/leave schedules ride the jit state (not the
+    closure) so fleet trials can carry different schedules. `n` is the
+    CAPACITY (peak fleet size, see `elastic_capacity`); `leave` uses the
+    `NEVER` sentinel for clients that stay.
+    """
+
+    # round 0 activates every PRESENT client, not every slot (module
+    # docstring: the documented Definition 5.2(1) deviation)
+    round0_all_active = False
+
+    def __init__(self, inner: AvailabilityProcess,
+                 join: np.ndarray | None = None,
+                 leave: np.ndarray | None = None):
+        self.inner = inner
+        self.n = inner.n
+        self.seed = inner.seed
+        self.stateless = inner.stateless
+        self.join = (np.zeros(self.n, np.int64) if join is None
+                     else np.asarray(join, np.int64))
+        self.leave = (np.full(self.n, NEVER, np.int64) if leave is None
+                      else np.asarray(leave, np.int64))
+        if self.join.shape != (self.n,) or self.leave.shape != (self.n,):
+            raise ValueError(
+                f"join/leave must be ({self.n},) round arrays, got "
+                f"{self.join.shape} / {self.leave.shape}")
+
+    # -- window protocol (forwarded to the inner process) ------------------ #
+    @property
+    def scan_window(self):
+        """Inner process's carried-window length; None when the inner
+        process has no streaming window (fully in-carry state)."""
+        return getattr(self.inner, "scan_window", None)
+
+    def load_window(self, state: dict, t0: int) -> dict:
+        """Re-point the inner process's carried window at [t0, t0+W)."""
+        return {**state, "inner": self.inner.load_window(state["inner"], t0)}
+
+    def load_window_fleet(self, state: dict, procs, t0: int) -> dict:
+        """Stacked-trial `load_window` over the trials' inner processes."""
+        return {**state, "inner": self.inner.load_window_fleet(
+            state["inner"], [p.inner for p in procs], t0)}
+
+    # -- jit surface ------------------------------------------------------- #
+    def init_state(self) -> dict:
+        """Inner state plus the (n,) join/leave schedules as jnp leaves."""
+        return {"inner": self.inner.init_state(),
+                "join": jnp.asarray(self.join, jnp.int32),
+                "leave": jnp.asarray(self.leave, jnp.int32)}
+
+    def sample_fn(self) -> Callable:
+        """Inner mask ANDed with presence; round 0 is every PRESENT client
+        (τ for the rest counts from the virtual round −1)."""
+        inner_fn = self.inner.sample_fn()
+
+        def sample(key, t, state):
+            mask, inner_state = inner_fn(key, t, state["inner"])
+            present = (state["join"] <= t) & (t < state["leave"])
+            return mask & present, {**state, "inner": inner_state}
+
+        return sample
+
+    # -- host surface ------------------------------------------------------ #
+    def host_step(self, t: int, state: dict) -> tuple[np.ndarray, dict]:
+        """NumPy mirror: inner host step ANDed with the same presence."""
+        mask, inner_state = self.inner.host_step(t, state["inner"])
+        present = (state["join"] <= t) & (t < state["leave"])
+        return (np.asarray(mask, bool) & np.asarray(present, bool),
+                {**state, "inner": inner_state})
+
+    # -- theory ------------------------------------------------------------ #
+    def stationary_rate(self) -> np.ndarray:
+        """(n,) long-run rate: the inner rate for clients that eventually
+        join and never leave, 0 for everyone else (departed / never-joined
+        clients are dark in the long run)."""
+        stays = (self.join < NEVER) & (self.leave >= NEVER)
+        return np.where(stays, self.inner.stationary_rate(), 0.0)
+
+    def tau_bound(self) -> TauBound:
+        """Departures (or never-joining clients) break Assumption 4
+        outright — τ of a departed device grows without bound. A purely
+        growing fleet keeps the inner bound shifted by the last arrival."""
+        inner_b = self.inner.tau_bound()
+        if np.any(self.leave < NEVER) or np.any(self.join >= NEVER):
+            return TauBound(
+                deterministic=False, t0=np.inf, expected_tau=np.nan,
+                note="departed clients never return: τ is unbounded on "
+                     "every sample path (arbitrary-unavailability regime)")
+        return TauBound(
+            deterministic=inner_b.deterministic,
+            t0=inner_b.t0 + float(self.join.max()),
+            expected_tau=np.nan,
+            note=f"growing fleet: inner bound ({inner_b.note or 'see inner'})"
+                 " shifted by the last arrival round")
+
+
+@register("elastic")
+def _elastic(*, n: int, seed: int = 0, inner: str = "bernoulli",
+             inner_kwargs: dict | None = None, join=None, leave=None,
+             n_initial: int | None = None, arrive_every: int = 16,
+             arrive_count: int | None = None, depart_frac: float = 0.0,
+             depart_at: int | None = None) -> ElasticProcess:
+    """Registry factory. `n` is the CAPACITY; the inner process is built
+    at that size via the registry (`inner` + `inner_kwargs`). Default
+    schedule: half the capacity present at round 0, the rest arriving in
+    waves every `arrive_every` rounds (`staged_arrivals`); `depart_frac`
+    of the capacity (the lowest client ids) leaves for good at
+    `depart_at` (default ``2 * arrive_every``). Pass explicit `join` /
+    `leave` (n,) round arrays to override."""
+    proc = make_process(inner, n=n, seed=seed, **(inner_kwargs or {}))
+    if join is None:
+        n_init = n_initial if n_initial is not None else max(n // 2, 1)
+        join = staged_arrivals(n, n_initial=n_init,
+                               arrive_every=arrive_every,
+                               arrive_count=arrive_count)
+    if leave is None:
+        leave = np.full(n, NEVER, np.int64)
+        k = int(n * depart_frac)
+        if k:
+            leave[:k] = depart_at if depart_at is not None \
+                else 2 * arrive_every
+    return ElasticProcess(proc, join=join, leave=leave)

@@ -84,6 +84,13 @@ def sim_scan_supported(runner: RoundRunner, sim: SimSpec) -> tuple[bool, str]:
         return False, ("the compiled simulator samples availability inside "
                        "the program; pass scenario= (host participation "
                        "processes have no jit-native surface)")
+    if getattr(runner.scen_process, "scan_window", None) is not None:
+        return False, ("windowed scenarios (trace replay) page their "
+                       "availability window in host-side between chunks, "
+                       "but the compiled simulator pre-draws whole epochs "
+                       "inside the program with no host hook at epoch "
+                       "granularity; the heap engine serves trace-driven "
+                       "availability through the host surface")
     if runner.cohort_mode:
         return False, ("cohort-based algorithms assemble compact batches on "
                        "the host per round; the simulated clock cannot ride "

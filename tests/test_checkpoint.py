@@ -1,6 +1,9 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import get_smoke_config
@@ -48,3 +51,27 @@ def test_roundtrip_mifa_state(tmp_path):
     back = load_pytree(p)
     assert back["G_q"]["w"].dtype == jnp.int8
     assert back["G_q"]["w"].shape == (4, 3, 2)
+
+
+def test_save_appends_npz_suffix(tmp_path):
+    p = save_pytree(str(tmp_path / "bare"), {"a": jnp.ones(2)})
+    assert p == str(tmp_path / "bare.npz") and os.path.exists(p)
+
+
+def test_atomic_save_survives_torn_write(tmp_path, monkeypatch):
+    """A crash mid-write (np.savez dies after emitting partial bytes) must
+    leave the PREVIOUS snapshot intact and no temp litter behind — the
+    durability contract `checkpoint.run_state` resumes on."""
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"a": jnp.arange(3)})
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 partial garbage")
+        raise OSError("disk gone")
+    monkeypatch.setattr(np, "savez", torn_savez)
+    with pytest.raises(OSError, match="disk gone"):
+        save_pytree(p, {"a": jnp.arange(3) * 100})
+    monkeypatch.undo()
+    back = load_pytree(p)                     # old snapshot still loads
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(3))
+    assert os.listdir(tmp_path) == ["ck.npz"]  # no tmp files left

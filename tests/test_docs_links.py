@@ -55,5 +55,6 @@ def test_intra_repo_markdown_links_resolve(path):
 
 def test_docs_tree_exists():
     """The durable reference tree README points at must be present."""
-    for f in ("architecture.md", "scenarios.md", "benchmarks.md"):
+    for f in ("architecture.md", "scenarios.md", "benchmarks.md",
+              "operations.md"):
         assert os.path.isfile(os.path.join(REPO, "docs", f)), f

@@ -32,6 +32,10 @@ MODULES = [
     "repro.scenarios.base",
     "repro.scenarios.processes",
     "repro.scenarios.registry",
+    "repro.scenarios.trace_replay",
+    "repro.scenarios.elastic",
+    "repro.checkpoint.io",
+    "repro.checkpoint.run_state",
 ]
 
 # callable path -> params that may stay undocumented (beyond self/cls)
@@ -48,6 +52,13 @@ KEY_CALLABLES = {
     "repro.core.runner:RoundRunner.step_cohort": set(),
     "repro.fleet.executor:FleetRunner.step": set(),
     "repro.fleet.executor:FleetRunner.step_cohort": set(),
+    "repro.scenarios.trace_replay:write_trace": set(),
+    "repro.scenarios.trace_replay:synthesize_trace": set(),
+    "repro.scenarios.trace_replay:TraceReplay.load_window": set(),
+    "repro.checkpoint.io:save_pytree": set(),
+    "repro.checkpoint.run_state:save_run": set(),
+    "repro.checkpoint.run_state:restore_run": set(),
+    "repro.checkpoint.run_state:fast_forward_sampler": set(),
 }
 
 

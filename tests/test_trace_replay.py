@@ -1,0 +1,375 @@
+"""Trace replay, elastic fleets, and whole-run checkpoint/resume.
+
+The anchor properties for `scenarios.trace_replay` / `scenarios.elastic` /
+`checkpoint.run_state`:
+
+  * the v1 trace file round-trips (array and streamed-iterator writers),
+    clamps past the end, and refuses malformed inputs;
+  * `TraceReplay` draws bit-identical masks on the host and jit surfaces
+    across window re-pages, under every engine and every `scan_chunk` —
+    and the scan engine streams windows without EVER materialising a
+    (T, N) mask matrix (monkeypatch-verified on the read primitive);
+  * `ElasticProcess` is exactly `inner AND presence`, composes over
+    trace replay (window protocol forwarded), and classifies departures
+    as the arbitrary (no τ-bound) regime;
+  * a run killed mid-horizon and resumed from its latest snapshot
+    produces fp32 bit-exact params + history vs the uninterrupted run,
+    for dense MIFA and both banked (cohort) backends — the PR's
+    durability acceptance gate.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bank import BankedMIFA, DenseBank, make_bank
+from repro.checkpoint import (CheckpointSpec, checkpoint_path,
+                              latest_checkpoint, list_checkpoints)
+from repro.core import MIFA, run_fl
+from repro.scenarios import (ElasticProcess, GilbertElliott, Scenario,
+                             TraceReplay, elastic_capacity, make_scenario,
+                             open_trace, staged_arrivals, synthesize_trace,
+                             write_trace)
+from repro.scenarios.elastic import NEVER
+from repro.scenarios.trace_replay import TraceFile
+
+N, T = 8, 12
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "fixtures", "device_trace_n20_t64.npy")
+
+
+@pytest.fixture(scope="module")
+def trace_path(tmp_path_factory):
+    """A small synthesized trace with churn shared by the module's tests."""
+    p = str(tmp_path_factory.mktemp("traces") / "dev.npy")
+    return synthesize_trace(p, n=N, horizon=40, seed=5, rate=0.6,
+                            burst=3.0, churn_frac=0.25)
+
+
+def _kw(tiny_problem, **over):
+    model, batcher = tiny_problem(n_clients=N)
+    kw = dict(model=model, batcher=batcher,
+              schedule=lambda t: 0.1 / (1 + t), n_rounds=T,
+              weight_decay=1e-3, seed=0, cohort_capacity=N)
+    kw.update(over)
+    return kw
+
+
+def _assert_same(run_a, run_b):
+    (pa, ha), (pb, hb) = run_a, run_b
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ha.train_loss == hb.train_loss
+    assert ha.n_active == hb.n_active
+    assert ha.rounds == hb.rounds
+    assert (ha.tau_bar, ha.tau_max) == (hb.tau_bar, hb.tau_max)
+
+
+# --------------------------------------------------------------------------- #
+# trace file format
+# --------------------------------------------------------------------------- #
+
+def test_write_read_roundtrip_array(tmp_path):
+    rng = np.random.default_rng(0)
+    masks = rng.random((17, 11)) < 0.5
+    p = write_trace(str(tmp_path / "t"), masks)      # .npy appended
+    assert p.endswith(".npy") and os.path.exists(p[:-4] + ".json")
+    tf = open_trace(p)
+    assert (tf.n_rounds, tf.n_clients) == (17, 11)
+    np.testing.assert_array_equal(tf.read_block(0, 17), masks)
+    # partial block + clamp past the end: rows repeat the last row
+    np.testing.assert_array_equal(tf.read_block(15, 5),
+                                  masks[[15, 16, 16, 16, 16]])
+
+
+def test_write_read_roundtrip_iterator(tmp_path):
+    rng = np.random.default_rng(1)
+    masks = rng.random((10, 9)) < 0.4
+    p = write_trace(str(tmp_path / "t.npy"),
+                    iter([masks[:4], masks[4:7], masks[7:]]),
+                    n_clients=9, n_rounds=10)
+    np.testing.assert_array_equal(open_trace(p).read_block(0, 10), masks)
+
+
+def test_write_trace_rejects_malformed(tmp_path):
+    with pytest.raises(ValueError, match="n_clients"):
+        write_trace(str(tmp_path / "a"), iter([np.ones((2, 3), bool)]))
+    with pytest.raises(ValueError, match="sum to"):
+        write_trace(str(tmp_path / "b"), iter([np.ones((2, 3), bool)]),
+                    n_clients=3, n_rounds=5)
+    with pytest.raises(ValueError, match="block must be"):
+        write_trace(str(tmp_path / "c"), iter([np.ones((2, 4), bool)]),
+                    n_clients=3, n_rounds=2)
+    # a failed write leaves no torn payload behind
+    assert not any(f.endswith(".npy") for f in os.listdir(tmp_path))
+
+
+def test_open_trace_rejects_format_mismatch(tmp_path):
+    p = write_trace(str(tmp_path / "t"), np.ones((3, 4), bool))
+    side = p[:-4] + ".json"
+    with open(side, "w") as f:
+        f.write('{"format": "not-a-trace", "n_clients": 4, "n_rounds": 3}')
+    with pytest.raises(ValueError, match="expected format"):
+        open_trace(p)
+
+
+def test_committed_fixture_is_valid():
+    """The CI smoke fixture: correct sidecar, some churned-out devices."""
+    tf = open_trace(FIXTURE)
+    assert (tf.n_clients, tf.n_rounds) == (20, 64)
+    block = tf.read_block(0, 64)
+    assert (~block[-1]).any()        # churned devices dark at the end
+    proc = TraceReplay(FIXTURE)
+    assert not proc.tau_bound().deterministic      # arbitrary regime
+
+
+# --------------------------------------------------------------------------- #
+# TraceReplay: surfaces, windows, resize guard
+# --------------------------------------------------------------------------- #
+
+def test_trace_replay_host_vs_jit_across_repages(trace_path):
+    """Window W=4 forces re-pages every 4 rounds; both surfaces stay
+    bit-identical through them and past the end of the trace."""
+    proc = TraceReplay(trace_path, window=4)
+    sample = jax.jit(proc.sample_fn())
+    state = proc.init_state()
+    host = proc.host_sampler()
+    raw = open_trace(trace_path)
+    for t in range(55):                     # horizon is 40: exercises clamp
+        if t % 4 == 0:                      # engine re-pages chunk-aligned
+            state = proc.load_window(state, t)
+        mask, state = sample(proc.key, jnp.int32(t), state)
+        np.testing.assert_array_equal(np.asarray(mask), host.sample(t),
+                                      err_msg=f"t={t}")
+        if t > 0:
+            np.testing.assert_array_equal(
+                host.sample(t), raw.read_block(t, 1)[0], err_msg=f"t={t}")
+
+
+def test_trace_replay_rejects_resize(trace_path):
+    with pytest.raises(ValueError, match="cannot resize"):
+        TraceReplay(trace_path, n=N + 1)
+    with pytest.raises(ValueError, match="window"):
+        TraceReplay(trace_path, window=0)
+
+
+def test_registry_synthesizes_and_caches(tmp_path):
+    scen = make_scenario("trace_replay", n=6, seed=2, horizon=20,
+                         cache_dir=str(tmp_path))
+    scen2 = make_scenario("trace_replay", n=6, seed=2, horizon=20,
+                          cache_dir=str(tmp_path))
+    assert scen.process.trace.path == scen2.process.trace.path
+    assert len([f for f in os.listdir(tmp_path) if f.endswith(".npy")]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# engines: chunk invariance, no (T, N) materialisation
+# --------------------------------------------------------------------------- #
+
+def _trace_scen(trace_path, window=T):
+    return Scenario(TraceReplay(trace_path, window=window), name="trace")
+
+
+@pytest.mark.parametrize("chunk", [1, 7, T])
+def test_scan_chunk_invariance_vs_loop(tiny_problem, trace_path, chunk):
+    kw = _kw(tiny_problem)
+    loop = run_fl(algo=MIFA(memory="array"), engine="loop",
+                  scenario=_trace_scen(trace_path), **kw)
+    scan = run_fl(algo=MIFA(memory="array"), engine="scan_strict",
+                  scan_chunk=chunk, scenario=_trace_scen(trace_path), **kw)
+    _assert_same(loop, scan)
+
+
+def test_scan_chunk_wider_than_window_raises(tiny_problem, trace_path):
+    with pytest.raises(ValueError, match="window"):
+        run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=8,
+               scenario=_trace_scen(trace_path, window=4),
+               **_kw(tiny_problem))
+
+
+def test_scan_never_materialises_full_trace(tiny_problem, trace_path,
+                                            monkeypatch):
+    """Every read of the backing store is at most one window long — no
+    (T, N) mask matrix ever exists; windows re-page per chunk."""
+    window, lengths = 4, []
+    orig = TraceFile.read_block
+
+    def recording(self, t0, length):
+        lengths.append(length)
+        return orig(self, t0, length)
+    monkeypatch.setattr(TraceFile, "read_block", recording)
+    run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=4,
+           scenario=_trace_scen(trace_path, window=window),
+           **_kw(tiny_problem))
+    assert lengths and max(lengths) <= window
+    assert len(lengths) >= T // window        # one page-in per chunk
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint/resume durability (the acceptance gate)
+# --------------------------------------------------------------------------- #
+
+CKPT_ALGOS = {
+    "mifa_array": lambda: MIFA(memory="array"),
+    "banked_dense": lambda: BankedMIFA(DenseBank()),
+    "banked_paged": lambda: BankedMIFA(make_bank("paged_device", n_slots=6)),
+}
+
+
+@pytest.mark.parametrize("name", list(CKPT_ALGOS))
+def test_kill_resume_bitexact(tiny_problem, trace_path, tmp_path, name):
+    """Kill at round 9, resume from the round-8 snapshot, finish at 14:
+    bit-exact vs the uninterrupted run (params, history, τ stats)."""
+    kw = _kw(tiny_problem, n_rounds=14)
+    run = lambda ckdir, n_rounds=14, resume=False: run_fl(
+        algo=CKPT_ALGOS[name](), engine="scan_strict", scan_chunk=5,
+        scenario=_trace_scen(trace_path),
+        checkpoint=CheckpointSpec(every=4, dir=ckdir, resume=resume),
+        **{**kw, "n_rounds": n_rounds})
+    full = run(str(tmp_path / "full"))
+    killed_dir = str(tmp_path / "killed")
+    run(killed_dir, n_rounds=9)               # snapshots after rounds 4, 8
+    assert [r for r, _ in list_checkpoints(killed_dir)] == [4, 8]
+    resumed = run(killed_dir, resume=True)
+    _assert_same(full, resumed)
+
+
+def test_resume_from_empty_dir_is_fresh_run(tiny_problem, trace_path,
+                                            tmp_path):
+    kw = _kw(tiny_problem)
+    a = run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=5,
+               scenario=_trace_scen(trace_path), **kw)
+    b = run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=5,
+               scenario=_trace_scen(trace_path),
+               checkpoint=CheckpointSpec(every=4, dir=str(tmp_path / "none"),
+                                         resume=True), **kw)
+    _assert_same(a, b)
+
+
+def test_resume_past_horizon_returns_final_state(tiny_problem, trace_path,
+                                                 tmp_path):
+    """Snapshot round >= n_rounds: restore and return, run nothing."""
+    kw = _kw(tiny_problem)
+    d = str(tmp_path / "ck")
+    done = run_fl(algo=MIFA(memory="array"), engine="scan_strict",
+                  scan_chunk=5, scenario=_trace_scen(trace_path),
+                  checkpoint=CheckpointSpec(every=4, dir=d), **kw)
+    again = run_fl(algo=MIFA(memory="array"), engine="scan_strict",
+                   scan_chunk=5, scenario=_trace_scen(trace_path),
+                   checkpoint=CheckpointSpec(every=4, dir=d, resume=True),
+                   **{**kw, "n_rounds": 8})
+    for a, b in zip(jax.tree.leaves(done[0]), jax.tree.leaves(again[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_prunes_old_snapshots(tiny_problem, trace_path,
+                                              tmp_path):
+    d = str(tmp_path / "ck")
+    run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=5,
+           scenario=_trace_scen(trace_path),
+           checkpoint=CheckpointSpec(every=4, dir=d, keep=1),
+           **_kw(tiny_problem))
+    assert [r for r, _ in list_checkpoints(d)] == [12]
+    assert latest_checkpoint(d) == checkpoint_path(d, 12)
+
+
+def test_checkpoint_validation():
+    with pytest.raises(ValueError, match="every"):
+        CheckpointSpec(every=0, dir="x")
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointSpec(every=1, dir="x", keep=0)
+
+
+def test_checkpoint_rejects_loop_engine(tiny_problem, trace_path, tmp_path):
+    with pytest.raises(ValueError, match="scan engine"):
+        run_fl(algo=MIFA(memory="array"), engine="loop",
+               scenario=_trace_scen(trace_path),
+               checkpoint=CheckpointSpec(every=4, dir=str(tmp_path)),
+               **_kw(tiny_problem))
+
+
+def test_checkpoint_refuses_silent_scan_fallback(tiny_problem, trace_path,
+                                                 tmp_path):
+    """A non-scannable config + checkpoint= must raise, not fall back to
+    the loop and silently drop durability."""
+    from repro.bank import HostBank
+    with pytest.raises(ValueError, match="drop durability"):
+        run_fl(algo=BankedMIFA(HostBank()), engine="scan",
+               scenario=_trace_scen(trace_path),
+               checkpoint=CheckpointSpec(every=4, dir=str(tmp_path)),
+               **_kw(tiny_problem))
+
+
+def test_resume_rejects_client_count_mismatch(tiny_problem, trace_path,
+                                              tmp_path):
+    d = str(tmp_path / "ck")
+    run_fl(algo=MIFA(memory="array"), engine="scan_strict", scan_chunk=5,
+           scenario=_trace_scen(trace_path),
+           checkpoint=CheckpointSpec(every=4, dir=d), **_kw(tiny_problem))
+    model, batcher = tiny_problem(n_clients=6)
+    with pytest.raises(ValueError, match="refusing to resume"):
+        run_fl(model=model, algo=MIFA(memory="array"), batcher=batcher,
+               schedule=lambda t: 0.1, n_rounds=T, weight_decay=1e-3,
+               scenario=GilbertElliott.from_rate_and_burst(0.5, 3.0, n=6),
+               engine="scan_strict",
+               checkpoint=CheckpointSpec(every=4, dir=d, resume=True))
+
+
+# --------------------------------------------------------------------------- #
+# elastic fleets
+# --------------------------------------------------------------------------- #
+
+def test_elastic_mask_is_inner_and_presence():
+    inner = GilbertElliott.from_rate_and_burst(0.5, 3.0, n=N, seed=4)
+    join = staged_arrivals(N, n_initial=3, arrive_every=5)
+    leave = np.full(N, NEVER, np.int64)
+    leave[0] = 12
+    proc = ElasticProcess(inner, join=join, leave=leave)
+    host_in = inner.host_sampler()
+    host_el = proc.host_sampler()
+    for t in range(25):
+        present = (join <= t) & (t < leave)
+        np.testing.assert_array_equal(host_el.sample(t),
+                                      host_in.sample(t) & present)
+
+
+def test_elastic_over_trace_scan_vs_loop(tiny_problem, trace_path):
+    """Elastic composed over trace replay: the window protocol is
+    forwarded, so the scan engine streams it like the bare process."""
+    kw = _kw(tiny_problem)
+    mk = lambda: Scenario(
+        ElasticProcess(TraceReplay(trace_path, window=T),
+                       join=staged_arrivals(N, n_initial=4, arrive_every=3)),
+        name="elastic-trace")
+    loop = run_fl(algo=MIFA(memory="array"), engine="loop", scenario=mk(),
+                  **kw)
+    scan = run_fl(algo=MIFA(memory="array"), engine="scan_strict",
+                  scan_chunk=4, scenario=mk(), **kw)
+    _assert_same(loop, scan)
+
+
+def test_elastic_capacity_and_arrivals():
+    assert elastic_capacity(5) == 8 and elastic_capacity(8) == 8
+    join = staged_arrivals(10, n_initial=4, arrive_every=6, arrive_count=2)
+    assert (join[:4] == 0).all()
+    assert join.tolist()[4:] == [6, 6, 12, 12, 18, 18]
+    with pytest.raises(ValueError, match="n_initial"):
+        staged_arrivals(4, n_initial=0)
+
+
+def test_elastic_tau_bound_classification():
+    det = make_scenario("adversarial", n=4, seed=0, periods=4,
+                        offs=1).process
+    grow = ElasticProcess(det, join=np.array([0, 0, 3, 7]))
+    b = grow.tau_bound()
+    assert b.deterministic == det.tau_bound().deterministic
+    assert b.t0 == det.tau_bound().t0 + 7
+    gone = ElasticProcess(det, leave=np.array([NEVER, NEVER, NEVER, 9]))
+    assert not gone.tau_bound().deterministic
+    assert np.isinf(gone.tau_bound().t0)
+    # departed / never-staying clients have zero long-run rate
+    assert gone.stationary_rate()[3] == 0.0
+    assert (gone.stationary_rate()[:3] > 0).all()
